@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks (CPU wall-time for the XLA paths; the Pallas
+kernels are the TPU target and are timed in interpret mode only for
+correctness, not speed).  Derived column: achieved GB/s or GFLOP/s on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def bench_fused_update():
+    n = 4 * 1024 * 1024
+    k = jax.random.key(0)
+    args = [jax.random.normal(jax.random.fold_in(k, i), (n,)) for i in range(4)]
+    fn = jax.jit(lambda x, g, xs, lam: ops.fused_update(x, g, xs, lam, 0.01, 2.0))
+    us = time_fn(fn, *args)
+    gbps = (5 * n * 4) / (us * 1e-6) / 1e9
+    emit("kernel_fused_update_xla_16M", us, f"effective_GBps={gbps:.2f}")
+
+
+def bench_wkv6():
+    B, S, H, K, V = 2, 1024, 8, 64, 64
+    key = jax.random.key(1)
+    r, k_, w_ = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, K)) * 0.5 for i in range(3))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, V)) * 0.5
+    w = jnp.exp(-jnp.exp(w_))
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, K)) * 0.1
+    s0 = jnp.zeros((B, H, K, V))
+    chunked = jax.jit(lambda *a: ops.wkv6(*a, chunk=64, impl="xla"))
+    us_c = time_fn(chunked, r, k_, v, w, u, s0)
+    seq = jax.jit(ref.wkv6_ref)
+    us_s = time_fn(seq, r, k_, v, w, u, s0)
+    emit("kernel_wkv6_chunked_xla_B2S1024", us_c, f"speedup_vs_sequential={us_s/us_c:.2f}x")
+    emit("kernel_wkv6_sequential_ref_B2S1024", us_s, "baseline")
+
+
+def bench_flash():
+    B, S, H, Hkv, hd = 1, 2048, 8, 2, 64
+    key = jax.random.key(2)
+    q = jax.random.normal(key, (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd), jnp.bfloat16)
+    pos = jnp.arange(S)
+    flash = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, pos, pos, causal_skip=True))
+    rect = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, pos, pos, causal_skip=False))
+    naive = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, pos, pos))
+    us_f = time_fn(flash, q, k, v)
+    us_r = time_fn(rect, q, k, v)
+    us_n = time_fn(naive, q, k, v)
+    emit("kernel_flash_xla_causal_skip_S2048", us_f, f"vs_naive={us_n/us_f:.2f}x")
+    emit("kernel_flash_xla_rectangular_S2048", us_r, f"causal_skip_saves={(us_r-us_f)/us_r:.1%}")
+
+
+def run():
+    bench_fused_update()
+    bench_wkv6()
+    bench_flash()
+
+
+if __name__ == "__main__":
+    run()

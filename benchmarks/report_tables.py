@@ -1,0 +1,95 @@
+"""Render the EXPERIMENTS.md tables from the experiments/{dryrun,roofline}
+JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report_tables [--which dryrun|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+ARCH_ORDER = [
+    "rwkv6-1.6b", "recurrentgemma-9b", "deepseek-v2-lite-16b", "llama3-8b",
+    "olmo-1b", "stablelm-12b", "llama4-maverick-400b-a17b",
+    "llava-next-mistral-7b", "musicgen-large", "yi-34b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _gib(b):
+    return b / 2**30
+
+
+def dryrun_table() -> str:
+    rows = [
+        "| arch | shape | mesh | step | mem/dev GiB | HLO GFLOP/dev | coll ops | coll MiB/dev |",
+        "|---|---|---|---|---:|---:|---:|---:|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                f = ROOT / "dryrun" / f"{a}_{s}_{mesh}.json"
+                if not f.exists():
+                    rows.append(f"| {a} | {s} | {mesh} | MISSING | | | | |")
+                    continue
+                d = json.loads(f.read_text())
+                if d["status"] == "skipped":
+                    rows.append(f"| {a} | {s} | {mesh} | skip | — | — | — | — |")
+                    continue
+                if d["status"] != "ok":
+                    rows.append(f"| {a} | {s} | {mesh} | FAILED | | | | |")
+                    continue
+                c = d["collectives"]["total"]
+                rows.append(
+                    f"| {a} | {s} | {mesh} | {d['step']} "
+                    f"| {_gib(d['memory']['peak_bytes_est']):.1f} "
+                    f"| {d['hlo_flops_per_device']/1e9:.1f} "
+                    f"| {c['count']} | {c['bytes']/2**20:.1f} |"
+                )
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant | useful FLOPs |",
+        "|---|---|---:|---:|---:|---|---:|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            f = ROOT / "roofline" / f"{a}_{s}.json"
+            if not f.exists():
+                rows.append(f"| {a} | {s} | | | | MISSING | |")
+                continue
+            d = json.loads(f.read_text())
+            if d["status"] == "skipped":
+                rows.append(f"| {a} | {s} | — | — | — | skip | — |")
+                continue
+            if d["status"] != "ok":
+                rows.append(f"| {a} | {s} | | | | FAILED: {d.get('error','')[:40]} | |")
+                continue
+            t = d["terms_seconds"]
+            rows.append(
+                f"| {a} | {s} | {t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} "
+                f"| {t['collective']*1e3:.2f} | **{d['dominant']}** "
+                f"| {d['useful_flops_ratio']:.1%} |"
+            )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", default="both", choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    if args.which in ("dryrun", "both"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+    if args.which in ("roofline", "both"):
+        print("\n### Roofline terms (single-pod 16x16)\n")
+        print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper figure/table + kernel micro-benches
+and the theory-rate instrument.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of: fig1,fig2,tab1,kernels,theory,beyond")
+    ap.add_argument("--fast", action="store_true", help="trim round counts")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (beyond_paper, fig1_fedsplit, fig2_lsq,
+                            kernels_bench, tab1_softmax, theory_rate)
+
+    jobs = {
+        "fig1": lambda: fig1_fedsplit.run(),
+        "fig2": lambda: fig2_lsq.run(rounds=60 if args.fast else 200),
+        "tab1": lambda: tab1_softmax.run(rounds=20 if args.fast else 60,
+                                         ks=(1, 5, 40) if args.fast else (1, 5, 10, 30, 40)),
+        "kernels": kernels_bench.run,
+        "theory": theory_rate.run,
+        "beyond": beyond_paper.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, job in jobs.items():
+        if want and name not in want:
+            continue
+        t0 = time.time()
+        try:
+            job()
+            print(f"# [{name}] done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Theorem 1 instrumented: measured Q^{r+1}/Q^r ratio vs the analytic beta
+bound along a real GPDMM trajectory (strongly convex least squares)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.base import FederatedConfig
+from repro.core import make, quadratic, theory
+from repro.core.api import resolved_rho
+
+
+def run():
+    prob = quadratic.generate(jax.random.key(3), m=10, n=400, d=64)
+    K, eta = 5, 0.5 / prob.L
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=eta)
+    rho = resolved_rho(cfg)
+    beta = theory.gpdmm_beta(prob.L, prob.mu, eta, rho)
+    opt = make(cfg)
+    s = opt.init(jnp.zeros((prob.d,)), prob.m)
+
+    lam_star = prob.lam_star()
+    qs = []
+    x_c_prev = s["x_c"]
+    t_round = None
+    for r in range(40):
+        s, metrics = opt.round(s, prob.grad, prob.batch(), return_trace=True)
+        tr = metrics["trace"]
+        q = theory.q_functional(
+            cfg, x_c_prev=x_c_prev, x_bar=tr["x_bar"], lam_is=tr["lam_is"],
+            x_star=prob.x_star, lam_star=lam_star, L=prob.L, mu=prob.mu,
+        )
+        qs.append(float(q))
+        x_c_prev = tr["x_K"]
+    qs = np.asarray(qs)
+    ratios = qs[1:] / np.maximum(qs[:-1], 1e-30)
+    emit("theory_rate_gpdmm", 0.0,
+         f"beta_bound={beta:.6f} worst_measured_ratio={ratios.max():.6f} "
+         f"median_ratio={np.median(ratios):.6f} bound_holds={bool((ratios <= beta + 1e-3).all())}")
+    assert (ratios <= beta + 1e-3).all()
+    agpdmm_empirical_rate(prob, K, eta, beta)
+
+
+def agpdmm_empirical_rate(prob, K, eta, beta_gpdmm):
+    """The paper leaves AGPDMM's K>1 convergence analysis open (SSVII).
+    Empirical instrument: the per-round contraction of ||x_s - x*|| along an
+    AGPDMM trajectory, reported against GPDMM's Theorem-1 beta.  Finding:
+    AGPDMM's measured contraction is faster (smaller factor) than GPDMM's
+    analytic bound -- evidence the open analysis should yield a rate at
+    least as good as Theorem 1."""
+    rates = {}
+    for algo in ("gpdmm", "agpdmm"):
+        opt = make(FederatedConfig(algorithm=algo, inner_steps=K, eta=eta))
+        s = opt.init(jnp.zeros((prob.d,)), prob.m)
+        dists = []
+        for _ in range(30):
+            s, _ = opt.round(s, prob.grad, prob.batch())
+            dists.append(float(prob.dist(opt.server_params(s))))
+        d = np.asarray(dists)
+        # geometric-mean contraction over the pre-f32-floor segment
+        seg = d[d > 1e-5]
+        c = (seg[-1] / seg[0]) ** (1.0 / max(1, len(seg) - 1))
+        rates[algo] = c
+    emit("theory_agpdmm_empirical", 0.0,
+         f"gpdmm_contraction={rates['gpdmm']:.4f} "
+         f"agpdmm_contraction={rates['agpdmm']:.4f} beta_bound={beta_gpdmm:.4f} "
+         f"agpdmm_beats_bound={bool(rates['agpdmm'] <= beta_gpdmm)}")
+    assert rates["agpdmm"] <= rates["gpdmm"] + 1e-6  # AGPDMM at least as fast
+    assert rates["agpdmm"] <= beta_gpdmm  # and inside the GPDMM guarantee
+
+
+if __name__ == "__main__":
+    run()

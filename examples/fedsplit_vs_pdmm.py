@@ -1,0 +1,46 @@
+"""The paper's Fig. 1 story in one script: why Inexact FedSplit fails, and
+how GPDMM/AGPDMM fix it.
+
+    PYTHONPATH=src python examples/fedsplit_vs_pdmm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+from repro.core import fedsplit, make, pdmm, quadratic
+
+prob = quadratic.generate(jax.random.key(0), m=25, n=1000, d=200)
+x0 = jnp.zeros((prob.d,))
+
+# --- 1. Exact PDMM == exact FedSplit (SSIII-B) ------------------------------
+cfg = FederatedConfig(rho=prob.L / 10)
+p, f = pdmm.make_exact(cfg), fedsplit.make_exact(cfg)
+sp, sf = p.init(x0, prob.m), f.init(x0, prob.m)
+prox = prob.make_client_prox()
+for _ in range(10):
+    sp, _ = p.round(sp, prox)
+    sf, _ = f.round(sf, prox)
+print(f"exact PDMM vs FedSplit trajectory diff: "
+      f"{float(jnp.max(jnp.abs(sp['x_s'] - sf['x_s']))):.2e}  (identical)")
+
+# --- 2. Inexact FedSplit: improper init stalls ------------------------------
+eta = 1.0 / prob.L
+for init, label in [("z", "z_{s|i} init (paper: improper)"),
+                    ("xs", "x_s init (fixed)")]:
+    opt = make(FederatedConfig(algorithm="fedsplit", inner_steps=3, eta=eta,
+                               fedsplit_init=init, rho=prob.L / 10))
+    s = opt.init(x0, prob.m)
+    rf = jax.jit(lambda s: opt.round(s, prob.grad, prob.batch())[0])
+    for _ in range(300):
+        s = rf(s)
+    print(f"Inexact FedSplit, {label:32s} gap = {float(prob.gap(s['x_s'])):.3e}")
+
+# --- 3. GPDMM / AGPDMM converge -----------------------------------------
+for algo in ["gpdmm", "agpdmm"]:
+    opt = make(FederatedConfig(algorithm=algo, inner_steps=3, eta=0.5 / prob.L))
+    s = opt.init(x0, prob.m)
+    rf = jax.jit(lambda s: opt.round(s, prob.grad, prob.batch())[0])
+    for _ in range(300):
+        s = rf(s)
+    print(f"{algo.upper():8s} (paper's fix)                   gap = "
+          f"{float(prob.gap(opt.server_params(s))):.3e}")

@@ -1,0 +1,37 @@
+"""Quickstart: solve the paper's least-squares problem with GPDMM in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+from repro.core import make, quadratic
+
+# A federated least-squares problem: 8 clients, heterogeneous data.
+prob = quadratic.generate(jax.random.key(0), m=8, n=400, d=64)
+
+# GPDMM (paper Alg. 1): K=5 local prox-gradient steps per round,
+# rho = 1/(K*eta) -- the paper's default coupling.
+cfg = FederatedConfig(algorithm="gpdmm", inner_steps=5, eta=0.5 / prob.L)
+opt = make(cfg)
+state = opt.init(jnp.zeros((prob.d,)), prob.m)
+
+
+@jax.jit
+def round_fn(s):
+    s, metrics = opt.round(s, prob.grad, prob.batch())
+    return s, metrics
+
+
+for r in range(100):
+    state, metrics = round_fn(state)
+    if r % 20 == 0 or r == 99:
+        dist = float(prob.dist(opt.server_params(state)))
+        print(f"round {r:3d}  ||x - x*|| {dist:.3e}  "
+              f"dual-sum invariant {float(metrics['lam_sum_norm']):.2e}")
+
+# iterate distance, not the f32 functional gap (F ~ 1e5: F - F* is pure
+# rounding noise once converged)
+assert float(prob.dist(opt.server_params(state))) < 1e-3
+print("converged -- GPDMM solves the centralised-network problem.")

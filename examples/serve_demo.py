@@ -1,0 +1,10 @@
+"""Batched serving demo: prefill a prompt batch, decode tokens with each
+cache type (full KV for a dense arch, O(1) recurrent state for RWKV-6).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.launch.serve import run
+
+for arch in ["olmo-1b", "rwkv6-1.6b", "recurrentgemma-9b"]:
+    print(f"\n=== {arch} (reduced config) ===")
+    run(arch, reduced=True, batch=4, prompt_len=32, new_tokens=8)

@@ -1,0 +1,92 @@
+"""End-to-end driver: federated training of a transformer LM with the paper's
+optimisers on heterogeneous synthetic data (each client draws from its own
+topic distribution), comparing GPDMM / AGPDMM / FedAvg.
+
+Default preset is CPU-sized (~20M params, 60 rounds, a few minutes).  The
+``--preset 100m`` configuration (d_model 768, 12 layers, ~110M params, 300
+rounds) is the assignment's "train a ~100M model for a few hundred steps"
+driver -- run it on real accelerators or leave it overnight on CPU.
+
+    PYTHONPATH=src python examples/train_federated_lm.py
+    PYTHONPATH=src python examples/train_federated_lm.py --preset 100m --algos gpdmm
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.configs.base import FederatedConfig
+from repro.core import make as make_fed
+from repro.data.synthetic import lm_batches
+from repro.models import build
+
+PRESETS = {
+    # (d_model, n_layers, d_ff, vocab, heads, steps, per_client_batch, seq)
+    "small": (256, 4, 1024, 4096, 4, 60, 4, 128),
+    "100m": (768, 12, 3072, 16384, 12, 300, 8, 256),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=list(PRESETS))
+    ap.add_argument("--algos", default="gpdmm,agpdmm,fedavg")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--k", type=int, default=4)
+    # eta 0.05 is in the stable region for these presets (0.5 diverges:
+    # the prox-gradient step stops contracting on the non-convex loss)
+    ap.add_argument("--eta", type=float, default=0.05)
+    args = ap.parse_args()
+
+    d, L, ff, vocab, heads, steps, pcb, seq = PRESETS[args.preset]
+    base = get_arch("olmo-1b").reduced()
+    cfg = dataclasses.replace(
+        base, d_model=d, n_layers=L, d_ff=ff, vocab_size=vocab,
+        n_heads=heads, n_kv_heads=heads, head_dim=d // heads,
+    )
+    model = build(cfg)
+    n_params = sum(int(jnp.size(x)) for x in jax.tree.leaves(model.init(jax.random.key(0))))
+    print(f"# preset={args.preset}: {n_params/1e6:.1f}M params, "
+          f"{steps} rounds, m={args.clients}, K={args.k}")
+
+    m = args.clients
+    results = {}
+    for algo in args.algos.split(","):
+        fed = make_fed(FederatedConfig(algorithm=algo, inner_steps=args.k, eta=args.eta))
+        params = model.init(jax.random.key(0))
+        state = fed.init(params, m)
+
+        def grad_fn(p, b):
+            return jax.grad(lambda q: model.loss(q, b)[0])(p)
+
+        @jax.jit
+        def step_fn(state, batch):
+            return fed.round(state, grad_fn, batch)
+
+        @jax.jit
+        def eval_loss(p, batch):
+            return jax.vmap(lambda b: model.loss(p, b)[0])(batch).mean()
+
+        curve = []
+        for i, batch in enumerate(
+            lm_batches(jax.random.key(1), steps, m, pcb, seq, cfg.vocab_size)
+        ):
+            state, _ = step_fn(state, batch)
+            if i % max(1, steps // 10) == 0 or i == steps - 1:
+                loss = float(eval_loss(fed.server_params(state), batch))
+                curve.append((i, loss))
+                print(f"[{algo:8s}] round {i:4d}  server loss {loss:.4f}", flush=True)
+        results[algo] = curve
+
+    print("\n# final server losses (heterogeneous clients, K="
+          f"{args.k}):")
+    for algo, curve in results.items():
+        print(f"#   {algo:8s} {curve[-1][1]:.4f}")
+    print(json.dumps({a: c for a, c in results.items()}))
+
+
+if __name__ == "__main__":
+    main()

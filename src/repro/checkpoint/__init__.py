@@ -1,0 +1,4 @@
+"""msgpack-based pytree checkpointing (substrate; no orbax offline)."""
+from repro.checkpoint.msgpack_ckpt import load, save, latest_step
+
+__all__ = ["save", "load", "latest_step"]

@@ -1,0 +1,85 @@
+"""Checkpointing: pytrees -> msgpack files with dtype/shape-preserving codecs.
+
+Layout: <dir>/step_<N>.msgpack, atomic writes via tmp+rename, ``latest_step``
+for resumption.  Handles nested dict/list/tuple pytrees of jax/numpy arrays
+and python scalars; bfloat16 round-trips via ml_dtypes.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401  (registers bfloat16 with numpy)
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+_TUP = "__tup__"
+
+
+def _encode(obj):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        arr = np.asarray(obj)
+        return {
+            _ARR: True,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    return obj
+
+
+def _pack(tree):
+    def rec(t):
+        if isinstance(t, dict):
+            return {k: rec(v) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            return {_TUP: isinstance(t, tuple), "items": [rec(v) for v in t]}
+        return _encode(t)
+
+    return rec(tree)
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"])).reshape(obj["shape"])
+            return jnp.asarray(arr)
+        if _TUP in obj:
+            items = [_unpack(v) for v in obj["items"]]
+            return tuple(items) if obj[_TUP] else items
+        return {k: _unpack(v) for k, v in obj.items()}
+    return obj
+
+
+def save(path: str | os.PathLike, step: int, tree: Any) -> str:
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    final = path / f"step_{step:08d}.msgpack"
+    tmp = final.with_suffix(".tmp")
+    tree = jax.tree.map(lambda x: jax.device_get(x) if isinstance(x, jax.Array) else x, tree)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+    os.replace(tmp, final)
+    return str(final)
+
+
+def latest_step(path: str | os.PathLike) -> Optional[int]:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    steps = [int(p.stem.split("_")[1]) for p in path.glob("step_*.msgpack")]
+    return max(steps) if steps else None
+
+
+def load(path: str | os.PathLike, step: Optional[int] = None) -> Any:
+    path = pathlib.Path(path)
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    with open(path / f"step_{step:08d}.msgpack", "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))

@@ -1,0 +1,26 @@
+"""The paper's contribution: (A)GPDMM -- inexact PDMM for centralised
+networks -- plus the exact PDMM/FedSplit pair and the SCAFFOLD/FedAvg
+baselines, all as model-agnostic pytree transformations.
+
+    from repro.core import make, FedOpt
+    fed = make(FederatedConfig(algorithm="agpdmm", inner_steps=5, eta=1e-4))
+    state = fed.init(params, m)
+    state, metrics = fed.round(state, grad_fn, batch)
+"""
+from repro.core.api import FedOpt, make, resolved_rho
+from repro.core import agpdmm, fedavg, fedsplit, gpdmm, pdmm, quadratic, scaffold, theory, tree_util
+
+__all__ = [
+    "FedOpt",
+    "make",
+    "resolved_rho",
+    "agpdmm",
+    "fedavg",
+    "fedsplit",
+    "gpdmm",
+    "pdmm",
+    "quadratic",
+    "scaffold",
+    "theory",
+    "tree_util",
+]

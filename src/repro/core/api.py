@@ -1,0 +1,66 @@
+"""Unified federated-optimiser interface (the paper's technique as a
+first-class, model-agnostic JAX module).
+
+Every algorithm is a pair of pure functions:
+
+    init(params, m)                  -> state          (pytree)
+    round(state, grad_fn, batch)     -> (state, metrics)
+
+with the conventions:
+  * ``params`` is any pytree (a scalar vector for the paper's experiments or a
+    full transformer parameter tree);
+  * per-client entries in ``state`` are stacked with a leading client dim m;
+  * ``grad_fn(params_i, batch_i) -> grad`` is the per-client gradient oracle;
+    ``round`` vmaps it over the client dim, so the same code runs the paper's
+    least-squares problems and sharded LM training;
+  * ``batch`` leaves have leading dim m, or (K, m, ...) when
+    ``per_step_batches=True`` (one minibatch per inner gradient step, the
+    paper's softmax-regression setup).
+
+The exact (prox-based) PDMM / FedSplit variants instead take a
+``prox_fn(v, rho) -> argmin_x f_i(x) + rho/2 ||x - v||^2`` oracle (vmapped the
+same way); they live in ``core.pdmm`` / ``core.fedsplit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+
+
+class FedOpt(NamedTuple):
+    name: str
+    init: Callable  # (params, m) -> state
+    round: Callable  # (state, grad_fn, batch, per_step_batches=False) -> (state, metrics)
+    server_params: Callable  # (state) -> params  (current global estimate)
+
+
+def resolved_rho(cfg: FederatedConfig) -> float:
+    """The paper's default rho = 1/(K * eta) (matched to SCAFFOLD's scaling)."""
+    return cfg.rho if cfg.rho is not None else 1.0 / (cfg.inner_steps * cfg.eta)
+
+
+def client_batches(batch, k: int, per_step: bool):
+    """Yields the batch for inner step k (shared or per-step)."""
+    if not per_step:
+        return batch
+    return jax.tree.map(lambda x: x[k], batch)
+
+
+def make(cfg: FederatedConfig) -> FedOpt:
+    from repro.core import agpdmm, fedavg, fedsplit, gpdmm, scaffold
+
+    algos = {
+        "gpdmm": gpdmm.make,
+        "agpdmm": agpdmm.make,
+        "scaffold": scaffold.make,
+        "fedavg": fedavg.make,
+        "fedsplit": fedsplit.make_inexact,
+    }
+    if cfg.algorithm not in algos:
+        raise KeyError(f"unknown federated algorithm {cfg.algorithm!r}")
+    return algos[cfg.algorithm](cfg)

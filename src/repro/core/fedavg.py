@@ -1,0 +1,56 @@
+"""FedAvg (McMahan et al. 2017) -- the weakest baseline in the paper's
+experiments: plain local SGD + parameter averaging, no dual/control state, so
+it drifts under client heterogeneity when K > 1 (paper Fig. 2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+from repro.core import tree_util as T
+from repro.core.api import FedOpt
+from repro.kernels import ops
+
+
+def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
+    K, eta = cfg.inner_steps, cfg.eta
+    x_s = state["x_s"]
+    # FedAvg keeps no per-client state, so the client count comes from the
+    # batch layout: (m, ...) or (K, m, ...) with per-step batches.
+    b0 = jax.tree.leaves(batch)[0]
+    m = b0.shape[1] if per_step_batches else b0.shape[0]
+    x_s_b = T.tree_broadcast(x_s, m)
+    vgrad = jax.vmap(grad_fn)
+
+    def one_step(x, xs_k):
+        b = xs_k if per_step_batches else batch
+        g = vgrad(x, b)
+        zeros = T.tree_zeros_like(g)
+        x_new = T.tmap(lambda xx, gg, zz: ops.fused_update(xx, gg, xx, zz, eta, 0.0), x, g, zeros)
+        return x_new, None
+
+    if per_step_batches:
+        x_K, _ = jax.lax.scan(one_step, x_s_b, batch)
+    else:
+        x_K, _ = jax.lax.scan(one_step, x_s_b, None, length=K)
+
+    x_s_new = T.tree_client_mean(x_K)
+    new_state = {"x_s": x_s_new, "round": state["round"] + 1}
+    metrics = {"client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)))}
+    return new_state, metrics
+
+
+def make(cfg: FederatedConfig) -> FedOpt:
+    def init(params, m):
+        del m
+        return {"x_s": params, "round": jnp.zeros((), jnp.int32)}
+
+    return FedOpt(
+        name="fedavg",
+        init=init,
+        round=partial(_round, cfg),
+        server_params=lambda s: s["x_s"],
+    )

@@ -1,0 +1,153 @@
+"""GPDMM (Algorithm 1, Zhang et al. 2021): gradient-based PDMM for a
+centralised network, one transmitted variable per direction per round.
+
+Per round r (client i, K inner steps, rho = 1/(K eta) by default):
+
+    x_i^{r,0}   = x_i^{r-1,K}                        (carry, NOT x_s - lam/rho:
+                                                      the Inexact-FedSplit fix)
+    x_i^{r,k+1} = x_i^{r,k} - (1/(1/eta+rho)) [grad f_i(x_i^{r,k})
+                                               + rho (x_i^{r,k} - x_s^r)
+                                               + lam_{s|i}^r]        (eq. 20)
+    lam_{i|s}^{r+1} = rho (x_s^r - xref_i) - lam_{s|i}^r             (eq. 23/24)
+    uplink   u_i   = xref_i - lam_{i|s}^{r+1} / rho                 (ONE var)
+    x_s^{r+1}      = mean_i u_i                                      (all-reduce)
+    lam_{s|i}^{r+1} = rho (xref_i - x_s^{r+1}) - lam_{i|s}^{r+1}     (local)
+
+where xref_i = mean_k x_i^{r,k} (eq. 23, Alg. 1) or x_i^{r,K} (eq. 24,
+Remark 1) when ``use_avg=False``.
+
+Communication note (recorded in EXPERIMENTS.md): in the SPMD mapping the
+uplink-mean is one all-reduce of a single parameter-sized tensor; the downlink
+combination x_s - lam_{s|i}/rho is reconstructed client-locally, so GPDMM's
+1-variable-per-direction claim is exactly one collective per round.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+from repro.core import tree_util as T
+from repro.core.api import FedOpt, resolved_rho
+from repro.kernels import ops
+
+
+def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
+                vr_snapshot=None):
+    """Runs the K inexact-PDMM client steps (shared by GPDMM/AGPDMM).
+
+    x0, x_s_b, lam_s: stacked (m, ...) pytrees.  Returns (x_K, x_bar).
+
+    ``vr_snapshot`` (beyond paper; requires ``per_step`` batches): SVRG-style
+    variance reduction in the stochastic setting the paper names as future
+    work (SSVII), following [14]'s PDMM+SVRG for P2P networks.  With snapshot
+    z (the round's fresh server estimate) the step-k gradient becomes
+
+        g_k(x) - g_k(z) + mean_j g_j(z)
+
+    -- unbiased, with variance -> 0 as x -> z, restoring the deterministic
+    rates under minibatch noise at the cost of 2x gradient evals per step
+    plus one pass at the snapshot.
+    """
+    step_c = 1.0 / (1.0 / eta + rho)
+    vgrad = jax.vmap(grad_fn)
+
+    gbar = None
+    if vr_snapshot is not None:
+        assert per_step, "SVRG needs per-step minibatches (K, m, ...)"
+        # full-pass gradient at the snapshot: mean over the K step batches
+        snap_grads = jax.lax.map(lambda b: vgrad(vr_snapshot, b), batch)
+        gbar = T.tmap(lambda t: jnp.mean(t, axis=0), snap_grads)
+
+    def one_step(carry, xs_k):
+        x, xsum = carry
+        b = xs_k if per_step else batch
+        g = vgrad(x, b)
+        if gbar is not None:
+            g_snap = vgrad(vr_snapshot, b)
+            g = T.tmap(lambda a, c, d: a - c + d, g, g_snap, gbar)
+        x_new = T.tmap(
+            lambda xx, gg, ss, ll: ops.fused_update(xx, gg, ss, ll, step_c, rho),
+            x, g, x_s_b, lam_s,
+        )
+        return (x_new, T.tree_add(xsum, x_new)), None
+
+    init = (x0, T.tree_zeros_like(x0))
+    if per_step:
+        (x_K, xsum), _ = jax.lax.scan(one_step, init, batch)
+    else:
+        (x_K, xsum), _ = jax.lax.scan(one_step, init, None, length=K)
+    return x_K, T.tree_scale(xsum, 1.0 / K)
+
+
+def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, return_trace=False):
+    rho = resolved_rho(cfg)
+    K = cfg.inner_steps
+    x_s, lam_s, x_c = state["x_s"], state["lam_s"], state["x_c"]
+    m = jax.tree.leaves(lam_s)[0].shape[0]
+    x_s_b = T.tree_broadcast(x_s, m)
+
+    x_K, x_bar = inner_steps(
+        grad_fn, x_c, x_s_b, lam_s, batch, K=K, eta=cfg.eta, rho=rho,
+        per_step=per_step_batches,
+        vr_snapshot=x_s_b if cfg.variance_reduction == "svrg" else None,
+    )
+    x_ref = x_bar if cfg.use_avg else x_K
+
+    lam_is = T.tmap(lambda s, xr, l: rho * (s - xr) - l, x_s_b, x_ref, lam_s)
+    uplink = T.tmap(lambda xr, l: xr - l / rho, x_ref, lam_is)
+    new_state = {}
+    mask = None
+    if cfg.uplink_bits is not None:  # beyond-paper: EF21 delta-quantised uplink
+        uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
+    if cfg.participation < 1.0:  # beyond-paper: async PDMM (partial rounds)
+        mask = T.participation_mask(
+            jax.random.fold_in(jax.random.key(17), state["round"]), m, cfg.participation
+        )
+        # silent clients transmit nothing; the server keeps its cached view
+        uplink = T.tree_select(mask, uplink, state["u_hat"])
+    if cfg.uplink_bits is not None or cfg.participation < 1.0:
+        new_state["u_hat"] = uplink  # the server's per-client view
+    x_s_new = T.tree_client_mean(uplink)  # <- the round's single all-reduce
+    x_s_new_b = T.tree_broadcast(x_s_new, m)
+    # lam_{s|i}^{r+1} = rho (x_ref - x_s) - lam_{i|s} == rho (u_i - x_s):
+    # reconstructed from the TRANSMITTED uplink, so the quantised variant
+    # stays faithful to what a real server would see (it cannot separate
+    # x_ref from lam_{i|s} inside u_i).
+    lam_s_new = T.tmap(lambda u, s: rho * (u - s), uplink, x_s_new_b)
+
+    # silent clients did not really run their inner steps: keep their carry
+    x_c_new = x_K if mask is None else T.tree_select(mask, x_K, x_c)
+    new_state |= {"x_s": x_s_new, "lam_s": lam_s_new, "x_c": x_c_new, "round": state["round"] + 1}
+    metrics = {
+        # KKT invariant (25): sum_i lam_{s|i} == 0 identically
+        "lam_sum_norm": T.tree_norm(T.tree_client_sum(lam_s_new)),
+        "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+    }
+    if return_trace:  # quantities the convergence-theory checks need
+        metrics["trace"] = {"x_ref": x_ref, "x_bar": x_bar, "lam_is": lam_is, "x_K": x_K}
+    return new_state, metrics
+
+
+def make(cfg: FederatedConfig) -> FedOpt:
+    def init(params, m):
+        st = {
+            "x_s": params,
+            "lam_s": T.tree_zeros_like(T.tree_broadcast(params, m)),
+            "x_c": T.tree_broadcast(params, m),  # x_i^{0,K} = x_s^1 (Alg. 1)
+            "round": jnp.zeros((), jnp.int32),
+        }
+        if cfg.uplink_bits is not None or cfg.participation < 1.0:
+            # server's running view of each client's uplink (EF21 integrator /
+            # async-PDMM cache); init == round-0 uplink x_c - 0/rho
+            st["u_hat"] = st["x_c"]
+        return st
+
+    return FedOpt(
+        name="gpdmm",
+        init=init,
+        round=partial(_round, cfg),
+        server_params=lambda s: s["x_s"],
+    )

@@ -1,0 +1,141 @@
+"""Pytree arithmetic used by the federated core.  Per-client state is stored
+*stacked*: every leaf gains a leading client dim of size m.  On the production
+mesh that dim is sharded over the client axis ("data", or ("pod","data")), so
+``tree_client_mean`` lowers to exactly one all-reduce over the client axis --
+the server aggregation of the paper's star graph.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tmap(fn, *trees):
+    return jax.tree.map(fn, *trees)
+
+
+def tree_add(a, b):
+    return tmap(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return tmap(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return tmap(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y"""
+    return tmap(lambda a, b: alpha * a + b, x, y)
+
+
+def tree_zeros_like(a):
+    return tmap(jnp.zeros_like, a)
+
+
+def tree_client_mean(stacked):
+    """Mean over the leading client dim -> server aggregation (one all-reduce
+    over the client mesh axis when dim 0 is sharded over it)."""
+    return tmap(lambda x: jnp.mean(x, axis=0), stacked)
+
+
+def tree_client_sum(stacked):
+    return tmap(lambda x: jnp.sum(x, axis=0), stacked)
+
+
+def tree_broadcast(tree, m: int):
+    """Replicate a server pytree to the stacked (m, ...) client layout."""
+    return tmap(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
+
+
+def tree_stack(trees):
+    return tmap(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(stacked, i):
+    return tmap(lambda x: x[i], stacked)
+
+
+def tree_vdot(a, b):
+    # NB: jnp.vdot ravels its inputs -- a reshape that merges a sharded dim
+    # forces GSPMD to all-gather the full tensor (observed GiB-scale
+    # collectives from metrics alone).  jnp.sum(a*b) reduces in place.
+    leaves = jax.tree.leaves(
+        tmap(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    )
+    return sum(leaves, start=jnp.zeros((), jnp.float32))
+
+
+def tree_sqnorm(a):
+    return tree_vdot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_client_sqnorms(stacked):
+    """Per-client squared norms: (m,) array summed over all leaves."""
+    leaves = jax.tree.leaves(
+        tmap(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32)), axis=tuple(range(1, x.ndim))), stacked)
+    )
+    return sum(leaves)
+
+
+def tree_cast(a, dtype):
+    return tmap(lambda x: x.astype(dtype), a)
+
+
+# ---------------------------------------------------------------------------
+# quantized uplink (beyond-paper extension, EXPERIMENTS.md SSPerf H3)
+# ---------------------------------------------------------------------------
+
+def _qdq(x, bits: int):
+    """Symmetric per-(client, leaf) fake-quantise: returns dequantised value.
+
+    The scale is max-abs over each client's slice (axis 0 is the client dim),
+    mirroring what each client would compute locally before transmitting
+    int<bits> + one f32 scale."""
+    lo = float(2 ** (bits - 1) - 1)
+    red = tuple(range(1, x.ndim))
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red, keepdims=True) / lo
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -lo, lo)
+    return (q * scale).astype(x.dtype)
+
+
+def tree_select(mask, a, b):
+    """Per-client select over stacked (m, ...) pytrees: leaf[i] = a[i] if
+    mask[i] else b[i]; mask (m,) bool broadcast to each leaf's rank."""
+    def one(x, y):
+        mk = mask.reshape((mask.shape[0],) + (1,) * (x.ndim - 1))
+        return jnp.where(mk, x, y)
+    return tmap(one, a, b)
+
+
+def participation_mask(key, m: int, frac: float):
+    """Deterministic participation mask: exactly ceil(frac*m) active clients,
+    chosen by a seeded permutation (jit-safe, static count)."""
+    n_active = max(1, int(-(-frac * m // 1)))  # ceil
+    order = jax.random.permutation(key, m)
+    return order < n_active
+
+
+def tree_quantize_delta(tree, u_hat, bits: int):
+    """EF21-style difference compression of a stacked (m, ...) uplink pytree.
+
+    Each client transmits q(u_i - u_hat_i); both sides integrate
+    u_hat_i += q(.), so the server's view converges to u_i: the transmitted
+    *delta* (and with it the max-abs quantisation scale) shrinks as the
+    optimiser converges, driving the compression error to zero.  Directly
+    quantising u_i instead stalls at the quantisation floor because PDMM's
+    dual variables integrate the per-round rounding error (shown in
+    tests/test_core.py).
+
+    Returns the new server view u_hat'.
+    """
+    delta = tree_sub(tree, u_hat)
+    sent = tmap(lambda p: _qdq(p, bits), delta)
+    return tree_add(u_hat, sent)

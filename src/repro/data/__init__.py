@@ -1,0 +1,4 @@
+"""Synthetic data pipeline: generators + federated partitioning."""
+from repro.data import partition, synthetic
+
+__all__ = ["partition", "synthetic"]

@@ -1,0 +1,49 @@
+"""Client partitioning strategies for federated data."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def by_class(x, y, n_classes: int):
+    """The paper's split: client i carries exactly class i (maximum
+    heterogeneity).  Returns stacked (m, n_i, ...) with equal n_i (truncated
+    to the smallest class)."""
+    xs, ys = [], []
+    counts = [int((y == c).sum()) for c in range(n_classes)]
+    n = min(counts)
+    for c in range(n_classes):
+        idx = jnp.nonzero(y == c, size=n)[0]
+        xs.append(x[idx])
+        ys.append(y[idx])
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+def iid(key, x, y, m: int):
+    n = (x.shape[0] // m) * m
+    perm = jax.random.permutation(key, x.shape[0])[:n]
+    return x[perm].reshape(m, n // m, *x.shape[1:]), y[perm].reshape(m, n // m)
+
+
+def dirichlet(key, x, y, m: int, n_classes: int, alpha: float = 0.3):
+    """Dirichlet(alpha) label-skew partition (standard FL benchmark recipe).
+    Returns ragged lists (numpy) -- callers batch per client."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    y_np = np.asarray(y)
+    client_idx = [[] for _ in range(m)]
+    for c in range(n_classes):
+        idx = np.nonzero(y_np == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * m)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for i, part in enumerate(np.split(idx, cuts)):
+            client_idx[i].extend(part.tolist())
+    return [np.asarray(ci, dtype=np.int64) for ci in client_idx]
+
+
+def minibatch_schedule(n_per_client: int, batch_size: int, n_steps: int):
+    """The paper's deterministic mini-batch order (no randomness): step k
+    takes samples [k*B, (k+1)*B) mod n."""
+    starts = (np.arange(n_steps) * batch_size) % max(1, n_per_client - batch_size + 1)
+    return starts.astype(np.int64)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots, with XLA fallbacks.
+
+Layout (per the repo convention):
+  * ``<name>.py`` -- the Pallas kernel (``pl.pallas_call`` + ``BlockSpec``)
+  * ``ops.py``    -- jit'd dispatch wrappers (xla | pallas | pallas_interpret)
+  * ``ref.py``    -- pure-jnp oracles the kernels are validated against
+
+Kernels:
+  * ``fused_update``    -- the paper's GPDMM/AGPDMM client inner step (eq. 20),
+                           a memory-bound 4-read/1-write elementwise fusion.
+  * ``wkv6``            -- RWKV-6 chunked recurrence (data-dependent decay).
+  * ``flash_attention`` -- causal / sliding-window GQA attention.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

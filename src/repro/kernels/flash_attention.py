@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA-aware).
+
+TPU adaptation: grid (B*H, Sq/QB, Sk/KB) with the key axis innermost and
+sequential; the online-softmax accumulators (m, l, acc) live in VMEM scratch
+across key steps.  GQA is handled in the *index map* -- the k/v BlockSpecs
+map query-head bh to kv-head bh // group -- so grouped keys are never
+materialised per query head.
+
+Positions are assumed contiguous (q_pos = arange(Sq) + offset, k_pos =
+arange(Sk)): the train/prefill case this kernel serves.  Decode uses
+``ops.attend_cache`` (a single-token einsum, not kernel-worthy).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_QB = 128
+DEFAULT_KB = 128
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window, q_offset: int, qb: int, kb: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qi = pl.program_id(1)
+    q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0) + q_offset
+    k_pos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+
+    valid = jnp.ones((qb, kb), jnp.bool_)
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window is not None:
+        valid = valid & (k_pos > q_pos - window)
+
+    q = q_ref[0].astype(jnp.float32)  # (qb, hd)
+    k = k_ref[0].astype(jnp.float32)  # (kb, hd)
+    v = v_ref[0].astype(jnp.float32)  # (kb, vd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q, k, v, q_pos=None, k_pos=None, *,
+    causal: bool = True, window=None,
+    q_block: int = DEFAULT_QB, k_block: int = DEFAULT_KB,
+    interpret: bool = False,
+):
+    """q (B,Sq,H,hd); k (B,Sk,Hkv,hd); v (B,Sk,Hkv,vd).  q_pos/k_pos accepted
+    for API parity with ops.flash_attention but must be contiguous aranges
+    (q offset = Sk - Sq supported for suffix queries)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    G = H // Hkv
+    q_offset = 0
+    if q_pos is not None:
+        q_offset = int(jax.device_get(q_pos[0])) if not isinstance(q_pos, jax.core.Tracer) else 0
+
+    qb = min(q_block, Sq)
+    kb = min(k_block, Sk)
+    assert Sq % qb == 0 and Sk % kb == 0
+
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Sk, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Sk, vd)
+
+    grid = (B * H, Sq // qb, Sk // kb)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            scale=1.0 / math.sqrt(hd),
+            causal=causal,
+            window=window,
+            q_offset=q_offset,
+            qb=qb,
+            kb=kb,
+            nk=Sk // kb,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, hd), q_map),
+            pl.BlockSpec((1, kb, hd), kv_map),
+            pl.BlockSpec((1, kb, vd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, qb, vd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, vd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, vd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out.reshape(B, H, Sq, vd), 1, 2)

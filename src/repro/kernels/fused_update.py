@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for the paper's fused federated client step (eq. 20):
+
+    x' = x - step * (g + rho * (x - xs) + lam)
+
+Why a kernel: the GPDMM/AGPDMM inner loop runs K times per round over every
+parameter; it is purely memory-bound (arithmetic intensity ~1 flop/byte).  An
+unfused XLA graph reads/writes intermediate tensors; the fusion does exactly
+4 HBM reads + 1 write per element, the roofline minimum.
+
+Tiling: inputs are flattened and tiled (BLOCK_ROWS, 128) -- the TPU lane width
+-- so the kernel is a straight VMEM-resident vector op per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 256  # 256 x 128 x 4B x 5 arrays ~ 0.7 MB of VMEM per step
+
+
+def _kernel(x_ref, g_ref, xs_ref, lam_ref, o_ref, *, step: float, rho: float):
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    xs = xs_ref[...].astype(jnp.float32)
+    lam = lam_ref[...].astype(jnp.float32)
+    out = x - step * (g + rho * (x - xs) + lam)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def fused_update_pallas(x, g, xs, lam, step, rho, *, block: int = BLOCK_ROWS, interpret: bool = False):
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    tile = block * LANES
+    n_pad = (tile - n % tile) % tile
+
+    def flat(a):
+        a = a.reshape(-1)
+        if n_pad:
+            a = jnp.pad(a, (0, n_pad))
+        return a.reshape(-1, LANES)
+
+    xf, gf, xsf, lf = flat(x), flat(g), flat(xs), flat(lam)
+    rows = xf.shape[0]
+    grid = (rows // block,)
+    bs = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, step=float(step), rho=float(rho)),
+        grid=grid,
+        in_specs=[bs, bs, bs, bs],
+        out_specs=bs,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), dtype),
+        interpret=interpret,
+    )(xf, gf, xsf, lf)
+    return out.reshape(-1)[:n].reshape(shape)

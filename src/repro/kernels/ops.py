@@ -1,0 +1,300 @@
+"""Jit-ready kernel wrappers with implementation dispatch.
+
+``impl`` selects the backend:
+  * ``"xla"``              -- chunked pure-jnp path (default; what the CPU
+                              dry-run and the smoke tests lower)
+  * ``"pallas"``           -- Pallas TPU kernel (the deployment target)
+  * ``"pallas_interpret"`` -- Pallas kernel body interpreted on CPU; used by
+                              the kernel test-suite to validate the TPU code.
+
+The global default can be set once via ``set_default_impl`` (the launcher does
+this based on ``jax.default_backend()``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+_DEFAULT_IMPL = "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "pallas_interpret")
+    _DEFAULT_IMPL = impl
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return impl or _DEFAULT_IMPL
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _flash_xla(q, k, v, q_pos, k_pos, *, causal, window, q_chunk, k_chunk, causal_skip):
+    """Chunked online-softmax attention (memory O(q_chunk * k_chunk)).
+
+    Outer python loop over q chunks (so ``causal_skip`` can shrink the k range
+    statically per chunk -- that halves causal FLOPs); inner ``lax.scan`` over
+    k chunks carrying the online-softmax accumulators.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0, (Sq, q_chunk, Sk, k_chunk)
+    nq = Sq // q_chunk
+
+    q5 = q.reshape(B, Sq, Hkv, G, hd)
+    out_chunks = []
+    for i in range(nq):
+        qi = jax.lax.dynamic_slice_in_dim(q5, i * q_chunk, q_chunk, axis=1)
+        qpi = jax.lax.dynamic_slice_in_dim(q_pos, i * q_chunk, q_chunk, axis=0)
+        lo, hi = 0, Sk
+        if causal_skip and causal:
+            # static bounds: this q chunk covers absolute q positions
+            # [i*q_chunk, (i+1)*q_chunk) when q_pos is an arange (train or
+            # full prefill); key positions beyond hi are always masked.
+            hi = min(Sk, _ceil_to((i + 1) * q_chunk, k_chunk))
+            if window is not None:
+                lo = max(0, ((i * q_chunk - window) // k_chunk) * k_chunk)
+        nk = (hi - lo) // k_chunk
+        ks = jax.lax.dynamic_slice_in_dim(k, lo, hi - lo, axis=1).reshape(B, nk, k_chunk, Hkv, hd)
+        vs = jax.lax.dynamic_slice_in_dim(v, lo, hi - lo, axis=1).reshape(B, nk, k_chunk, Hkv, vd)
+        kps = jax.lax.dynamic_slice_in_dim(k_pos, lo, hi - lo, axis=0).reshape(nk, k_chunk)
+
+        def kv_step(carry, inp, qi=qi, qpi=qpi):
+            m, l, acc = carry
+            kj, vj, kpj = inp  # (B,kc,Hkv,hd), (B,kc,Hkv,vd), (kc,)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qi.astype(jnp.float32), kj.astype(jnp.float32)
+            ) * scale
+            valid = kpj[None, :] >= 0
+            if causal:
+                valid = valid & (kpj[None, :] <= qpi[:, None])
+            if window is not None:
+                valid = valid & (kpj[None, :] > qpi[:, None] - window)
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhv->bhgqv", p, vj.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), kps),
+        )
+        o = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,qc,vd)
+        out_chunks.append(jnp.moveaxis(o, 3, 1).reshape(B, q_chunk, H, vd))
+    return jnp.concatenate(out_chunks, axis=1).astype(q.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    causal_skip: bool = True,
+    impl: Optional[str] = None,
+):
+    """Causal (optionally sliding-window) GQA attention.
+
+    q (B,Sq,H,hd); k (B,Sk,Hkv,hd); v (B,Sk,Hkv,vd); positions as in
+    ``ref.attention_ref``.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _flash_xla(
+            q, k, v, q_pos, k_pos,
+            causal=causal, window=window,
+            q_chunk=q_chunk, k_chunk=k_chunk, causal_skip=causal_skip,
+        )
+    from repro.kernels import flash_attention as fa
+
+    return fa.flash_attention_pallas(
+        q, k, v, q_pos, k_pos,
+        causal=causal, window=window,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def attend_cache(q, k_cache, v_cache, q_pos, k_pos, *, window: Optional[int] = None):
+    """Single-token decode attention against a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, hd); caches (B, S, Hkv, hd/vd); q_pos scalar int; k_pos (S,).
+    """
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (k_pos >= 0) & (k_pos <= q_pos)
+    if window is not None:
+        valid = valid & (k_pos > q_pos - window)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhv->bhgv", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked wkv
+# ---------------------------------------------------------------------------
+
+def _wkv6_chunked_xla(r, k, v, w, u, s0, *, chunk: int):
+    """Chunked-parallel WKV6: O(S/C * C^2) intra-chunk matmuls + O(S/C) state
+    updates, mathematically identical to the sequential recurrence.
+
+    Let la_t = sum_{tau<=t} log w_tau (within chunk; la_0 = 0 at chunk start).
+      y_t   = (r_t * exp(la_{t-1})) @ S_0
+            + sum_{tau<t} [(r_t * exp(la_{t-1} - la_tau)) . k_tau] v_tau
+            + (r_t . u . k_t) v_t
+      S_C   = diag(exp(la_C)) S_0 + sum_tau diag(exp(la_C - la_tau)) k_tau v_tau^T
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))  # (B,S,H,K)
+    uf = u.astype(jnp.float32)
+
+    def chunk_step(s, inp):
+        rc, kc, vc, lwc = inp  # (B,C,H,K) etc.
+        la = jnp.cumsum(lwc, axis=1)  # (B,C,H,K), inclusive
+        la_prev = la - lwc  # exclusive cumsum: sum_{tau < t}
+        # inter-chunk: contribution of carried state (la_prev <= 0, exp safe)
+        r_dec = rc * jnp.exp(la_prev)
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, s)
+        # intra-chunk: pairwise decay exp(la_prev[t] - la[tau]) for tau < t.
+        # Computed as a clamped pairwise difference -- the two factors
+        # exp(la_prev) * exp(-la) can individually overflow even though the
+        # product is <= 1 for tau < t.
+        diff = la_prev[:, :, None] - la[:, None, :]  # (B, t, tau, H, K)
+        dec = jnp.exp(jnp.minimum(diff, 0.0))
+        att = jnp.einsum("bthk,bchk,btchk->bhtc", rc, kc, dec)
+        t_idx = jnp.arange(chunk)
+        mask = t_idx[:, None] > t_idx[None, :]
+        att = jnp.where(mask[None, None], att, 0.0)
+        bonus = jnp.einsum("bthk,bthk->bth", rc * uf[None, None], kc)
+        y = y_inter + jnp.einsum("bhtc,bchv->bthv", att, vc) + bonus[..., None] * vc
+        # state update
+        la_end = la[:, -1:]  # (B,1,H,K)
+        dec_k = kc * jnp.exp(la_end - la)  # decay from tau to chunk end
+        s_new = jnp.exp(la_end[:, 0])[..., None] * s + jnp.einsum("bchk,bchv->bhkv", dec_k, vc)
+        return s_new, y
+
+    resh = lambda a: jnp.moveaxis(a.reshape(B, n, chunk, H, -1), 1, 0)
+    s_final, ys = jax.lax.scan(
+        chunk_step, s0.astype(jnp.float32), (resh(rf), resh(kf), resh(vf), resh(lw))
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, V)
+    return y.astype(r.dtype), s_final
+
+
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 64, impl: Optional[str] = None):
+    """RWKV-6 recurrence. Shapes as in ``ref.wkv6_ref``."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _wkv6_chunked_xla(r, k, v, w, u, s0, chunk=chunk)
+    from repro.kernels import wkv6 as wk
+
+    return wk.wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=(impl == "pallas_interpret"))
+
+
+def wkv6_step(r1, k1, v1, w1, u, s):
+    """Single decode step. r1,k1,w1: (B,H,K); v1: (B,H,V); s: (B,H,K,V)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r1, k1, v1, w1))
+    sf = s.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rf, sf + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s_new = wf[..., :, None] * sf + kv
+    return y.astype(r1.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# fused federated client update
+# ---------------------------------------------------------------------------
+
+def fused_update(x, g, xs, lam, step, rho, *, impl: Optional[str] = None, block: int = 4096):
+    """Fused federated inner step (paper eq. (20)); see ``ref.fused_update_ref``.
+
+    The Pallas kernel fuses 4 HBM reads + 1 write into one pass -- the client
+    inner loop is memory-bound, so unfused XLA would read/write 6 arrays.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _ref.fused_update_ref(x, g, xs, lam, step, rho)
+    from repro.kernels import fused_update as fu
+
+    return fu.fused_update_pallas(
+        x, g, xs, lam, step, rho, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+# ---------------------------------------------------------------------------
+# rg-lru recurrence
+# ---------------------------------------------------------------------------
+
+def lru_scan(a, b, h0, *, chunk: int = 512):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t; a, b: (B, S, D), h0 (B, D).
+
+    Chunked: an outer ``lax.scan`` over S/chunk carries the boundary state and
+    an inner associative scan runs within each chunk.  A monolithic
+    associative scan over the full sequence materialises O(log S) full-size
+    f32 intermediates -- at 32k x 4096 that alone was tens of GiB/device.
+    """
+    B, S, D = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    af = a.astype(jnp.float32).reshape(B, n, chunk, D)
+    bf = b.astype(jnp.float32).reshape(B, n, chunk, D)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        ac, bc = inp  # (B, chunk, D)
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hs = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return hs[:, -1], hs
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0.astype(jnp.float32), (jnp.moveaxis(af, 1, 0), jnp.moveaxis(bf, 1, 0))
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    return y.astype(a.dtype), h_last

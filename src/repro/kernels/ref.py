@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every kernel.  Deliberately naive and readable --
+these are the ground truth the Pallas kernels and the chunked XLA paths are
+tested against (``tests/test_kernels.py`` sweeps shapes/dtypes and hypothesis
+cases and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, q_pos, k_pos, *, causal=True, window=None):
+    """Naive masked softmax attention.
+
+    q: (B, Sq, H, hd); k: (B, Sk, Hkv, hd); v: (B, Sk, Hkv, vd).
+    q_pos: (Sq,) int32 absolute positions; k_pos: (Sk,) int32, -1 = empty slot.
+    GQA: H % Hkv == 0; query group g attends to kv head g // (H // Hkv).
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / jnp.sqrt(hd).astype(jnp.float32)
+    valid = k_pos[None, :] >= 0
+    if causal:
+        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhgqk,bkhv->bqhgv", probs, vf)
+    return out.reshape(B, Sq, H, vf.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv recurrence
+# ---------------------------------------------------------------------------
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Sequential RWKV-6 recurrence (data-dependent decay).
+
+    r, k, w: (B, S, H, K); v: (B, S, H, V); u: (H, K); s0: (B, H, K, V).
+    State update: S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Output:       y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    Returns y: (B, S, H, V), s_final: (B, H, K, V).  All math in f32.
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    sf = s0.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,K), (B,H,K), (B,H,V), (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    s_final, ys = jax.lax.scan(step, sf, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,V)
+    return y.astype(r.dtype), s_final
+
+
+# ---------------------------------------------------------------------------
+# fused federated client update (paper eq. (20))
+# ---------------------------------------------------------------------------
+
+def fused_update_ref(x, g, xs, lam, step, rho):
+    """Generalised federated inner step (paper eq. (20) and relatives):
+
+        x' = x - step * (g + rho * (x - xs) + lam)
+
+    GPDMM/AGPDMM: step = 1/(1/eta + rho); Inexact FedSplit: step = eta,
+    lam = 0; SCAFFOLD: step = eta, rho = 0, lam = c - c_i.
+    All elementwise; f32 accumulate.
+    """
+    xf, gf, xsf, lf = (a.astype(jnp.float32) for a in (x, g, xs, lam))
+    return (xf - step * (gf + rho * (xf - xsf) + lf)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rg-lru linear recurrence
+# ---------------------------------------------------------------------------
+
+def lru_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t  (elementwise), a/b: (B, S, D), h0: (B, D)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    hs_final, hs = jax.lax.scan(step, h0.astype(jnp.float32), (jnp.moveaxis(af, 1, 0), jnp.moveaxis(bf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), hs_final

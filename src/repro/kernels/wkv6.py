@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the RWKV-6 chunked recurrence (data-dependent decay).
+
+TPU adaptation of the (GPU, CUDA) reference: instead of one thread-block per
+(batch, head) scanning time serially, the grid is (B*H, S/C) with the chunk
+axis iterated sequentially (TPU grids execute in order); the running state
+S in R^{KxV} lives in a VMEM scratch buffer across chunk steps, and the
+intra-chunk interactions become (C x C) MXU matmuls -- the same
+chunk-parallel decomposition as ``ops._wkv6_chunked_xla`` (the oracle is
+``ref.wkv6_ref``):
+
+    y_t = r_t exp(la_{t-1}) S_chunk0
+        + sum_{tau<t} [r_t . k_tau . exp(la_{t-1}-la_tau)] v_tau
+        + (r_t . u . k_t) v_t
+    S  <- exp(la_C) S + (k exp(la_C - la))^T v
+
+Block shapes: (1, C, K) tiles of r/k/v/w per grid step; C=64, K=V=64 keeps
+every operand MXU-aligned and the scratch + operands well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref, s_scr, *, nc: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)  # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (C, V)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)  # (1, K)
+    s = s_scr[...]  # (K, V)
+
+    C = r.shape[0]
+    lw = jnp.log(jnp.maximum(w, 1e-38))
+    la = jnp.cumsum(lw, axis=0)
+    la_prev = la - lw
+
+    # inter-chunk term
+    y = jnp.dot(r * jnp.exp(la_prev), s, preferred_element_type=jnp.float32)
+    # intra-chunk pairwise term (strict lower triangle)
+    diff = la_prev[:, None, :] - la[None, :, :]  # (C, C, K)
+    dec = jnp.exp(jnp.minimum(diff, 0.0))
+    att = jnp.sum(r[:, None, :] * dec * k[None, :, :], axis=-1)  # (C, C)
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    t_j = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    att = jnp.where(t_i > t_j, att, 0.0)
+    y = y + jnp.dot(att, v, preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * u * k, axis=-1, keepdims=True)  # (C, 1)
+    y = y + bonus * v
+
+    la_end = la[-1:]  # (1, K)
+    dec_k = k * jnp.exp(la_end - la)  # (C, K)
+    s_new = jnp.exp(la_end).T * s + jnp.dot(dec_k.T, v, preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == nc - 1)
+    def _fin():
+        sout_ref[0] = s_new
+
+
+def wkv6_pallas(r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = False):
+    """Shapes as ``ref.wkv6_ref``: r,k,w (B,S,H,K); v (B,S,H,V); u (H,K);
+    s0 (B,H,K,V).  Returns (y (B,S,H,V), s_final (B,H,K,V) f32)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    nc = S // C
+    BH = B * H
+
+    def to_bh(a, d):
+        return jnp.moveaxis(a, 2, 1).reshape(BH, S, d)
+
+    rb, kb, wb = to_bh(r, K), to_bh(k, K), to_bh(w, K)
+    vb = to_bh(v, V)
+    ub = jnp.broadcast_to(u[None], (B, H, K)).reshape(BH, K)
+    s0b = s0.reshape(BH, K, V)
+
+    seq_spec = lambda d: pl.BlockSpec((1, C, d), lambda bh, c: (bh, c, 0))  # noqa: E731
+    y, s_fin = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=(BH, nc),
+        in_specs=[
+            seq_spec(K),
+            seq_spec(K),
+            seq_spec(V),
+            seq_spec(K),
+            pl.BlockSpec((1, K), lambda bh, c: (bh, 0)),
+            pl.BlockSpec((1, K, V), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec(V),
+            pl.BlockSpec((1, K, V), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, V), r.dtype),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rb, kb, vb, wb, ub, s0b)
+
+    y = jnp.moveaxis(y.reshape(B, H, S, V), 1, 2)
+    return y, s_fin.reshape(B, H, K, V)

@@ -1,0 +1,271 @@
+"""Assembles the jit-able step functions + fully-sharded input specs for any
+(architecture x input-shape x mesh) combination.
+
+  * train  -> one federated ROUND (the paper's technique: K inexact-PDMM
+              client steps + the single server all-reduce), clients mapped
+              onto the mesh per FederatedConfig.layout.
+  * prefill -> full-sequence forward returning last-token logits + cache.
+  * decode -> one token against a seq_len-deep cache.
+
+``build_step(arch, shape, mesh)`` returns a ``StepBundle`` with the function,
+example ShapeDtypeStruct args, and in/out shardings -- consumed by both the
+dry-run driver and the real train/serve launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import make as make_fed
+from repro.models import build as build_model
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any  # None -> compiler-chosen
+    meta: dict
+    donate_argnums: tuple = ()  # state/cache aliasing (halves decode memory)
+
+
+def _tok_dtype():
+    return jnp.int32
+
+
+def num_clients(cfg: ArchConfig, mesh) -> int:
+    if cfg.fed.layout == "fsdp":
+        return cfg.fed.num_clients or 4
+    return sh.axis_size(mesh, sh.client_axes(mesh))
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig, *, stacked_m: Optional[int]):
+    """ShapeDtypeStructs for one batch (training: leading client dim m)."""
+    S = shape.seq_len
+    B = shape.global_batch if stacked_m is None else shape.global_batch // stacked_m
+    lead = () if stacked_m is None else (stacked_m,)
+    d: dict[str, Any] = {}
+    if cfg.n_codebooks > 1:
+        d["tokens"] = jax.ShapeDtypeStruct((*lead, B, cfg.n_codebooks, S), _tok_dtype())
+    elif cfg.frontend == "vision":
+        s_text = S - cfg.n_prefix_tokens
+        d["tokens"] = jax.ShapeDtypeStruct((*lead, B, s_text), _tok_dtype())
+        d["patches"] = jax.ShapeDtypeStruct(
+            (*lead, B, cfg.n_prefix_tokens, cfg.frontend_dim), jnp.bfloat16
+        )
+    else:
+        d["tokens"] = jax.ShapeDtypeStruct((*lead, B, S), _tok_dtype())
+    if shape.kind == "train":
+        d["targets"] = jax.ShapeDtypeStruct(d["tokens"].shape, _tok_dtype())
+    return d
+
+
+# ---------------------------------------------------------------------------
+# training (federated round)
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
+    assert shape.kind == "train"
+    model = build_model(cfg)
+    fed = make_fed(cfg.fed)
+    m = num_clients(cfg, mesh)
+    layout = cfg.fed.layout
+
+    nmb = cfg.microbatch
+    if nmb:
+        # clamp to the per-client batch: on the multi-pod mesh m doubles and
+        # the per-client batch halves (e.g. 256/32 = 8 < microbatch 16)
+        b_client = shape.global_batch // m
+        while nmb > 1 and b_client % nmb:
+            nmb -= 1
+        nmb = min(nmb, b_client)
+    if nmb and nmb > 1:
+        def client_grad(params, client_batch):
+            # grad accumulation over microbatches: activation memory /nmb
+            def split(x):
+                b = x.shape[0]
+                assert b % nmb == 0, (b, nmb)
+                return x.reshape(nmb, b // nmb, *x.shape[1:])
+
+            mb = jax.tree.map(split, client_batch)
+
+            def acc(g, mb_i):
+                gi = jax.grad(lambda p: model.loss(p, mb_i)[0])(params)
+                return jax.tree.map(jnp.add, g, gi), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            g, _ = jax.lax.scan(acc, g0, mb)
+            return jax.tree.map(lambda x, p: (x / nmb).astype(p.dtype), g, params)
+    else:
+        def client_grad(params, client_batch):
+            return jax.grad(lambda p: model.loss(p, client_batch)[0])(params)
+
+    def train_step(fed_state, batch):
+        new_state, metrics = fed.round(fed_state, client_grad, batch)
+        return new_state, metrics
+
+    # shapes + shardings
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_shard = sh.param_shardings(mesh, model.specs(), param_shapes, layout=layout)
+    state_shapes = jax.eval_shape(lambda p: fed.init(p, m), param_shapes)
+    stacked = sh.stacked_shardings(mesh, p_shard, layout=layout)
+    rep = sh.replicated(mesh)
+
+    def state_shardings(shapes):
+        out = {}
+        for k, v in shapes.items():
+            if k in ("x_s", "c"):
+                out[k] = p_shard
+            elif k in ("lam_s", "x_c", "c_i", "z_s", "u_hat"):
+                out[k] = stacked
+            else:  # round counter etc.
+                out[k] = jax.tree.map(lambda _: rep, v)
+        return out
+
+    st_shard = state_shardings(state_shapes)
+    b_struct = batch_struct(cfg, shape, stacked_m=m)
+    b_shard = sh.batch_shardings(mesh, b_struct, stacked=True, layout=layout)
+
+    metrics_shapes = jax.eval_shape(train_step, state_shapes, b_struct)[1]
+    out_shardings = (st_shard, jax.tree.map(lambda _: rep, metrics_shapes))
+
+    return StepBundle(
+        name="train_step",
+        fn=train_step,
+        args=(state_shapes, b_struct),
+        in_shardings=(st_shard, b_shard),
+        out_shardings=out_shardings,
+        meta={
+            "m": m,
+            "layout": layout,
+            "K": cfg.fed.inner_steps,
+            "algorithm": cfg.fed.algorithm,
+        },
+        donate_argnums=(0,),  # fed_state is consumed each round
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _serve_layout(cfg: ArchConfig) -> str:
+    # big-model serving reuses the FSDP parameter layout (params sharded over
+    # data x model; XLA all-gathers per layer); others keep pure TP.
+    return cfg.fed.layout
+
+
+def _cache_seq_axis(cfg: ArchConfig, mesh) -> Optional[str]:
+    """SSPerf H2: shard the cache's seq dim over "model" when the head dim
+    cannot use that axis -- GQA kv-heads not divisible (yi/llama3 kv=8 on a
+    16-way axis) or MLA's head-free compressed cache.  Without this the
+    32k-deep cache is replicated across the model axis (observed 61 GiB of
+    decode arguments per device on yi-34b)."""
+    if not cfg.shard_cache_seq:
+        return None
+    model_size = sh.axis_size(mesh, "model")
+    if cfg.attn_kind == "mla" or cfg.n_kv_heads % model_size != 0:
+        return "model"
+    return None
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                       window_override: Optional[int] = None) -> StepBundle:
+    assert shape.kind == "prefill"
+    model = build_model(cfg, window_override=window_override)
+    cap = shape.seq_len + 8  # room for a few decode steps
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cap)
+
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_shard = sh.param_shardings(mesh, model.specs(), param_shapes, layout=_serve_layout(cfg))
+    b_struct = batch_struct(cfg, shape, stacked_m=None)
+    b_shard = sh.batch_shardings(mesh, b_struct, stacked=False)
+
+    # Pin the output shardings: left compiler-chosen, GSPMD replicates the
+    # 32k-deep cache on every device (observed 240 GiB/device on yi-34b).
+    B = shape.global_batch
+    cache_struct = model.cache_shapes(B, cap)
+    c_shard = {
+        "layers": sh.cache_shardings(
+            mesh, cache_struct["layers"], model.cache_specs()["layers"],
+            seq_axis=_cache_seq_axis(cfg, mesh),
+        ),
+        "pos": sh.replicated(mesh),
+    }
+    logits_sds = jax.eval_shape(prefill_step, param_shapes, b_struct)[0]
+    l_shard = sh.logits_shardings(mesh, logits_sds)
+
+    return StepBundle(
+        name="prefill_step",
+        fn=prefill_step,
+        args=(param_shapes, b_struct),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(l_shard, c_shard),
+        meta={"cap": cap},
+    )
+
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      window_override: Optional[int] = None) -> StepBundle:
+    assert shape.kind == "decode"
+    model = build_model(cfg, window_override=window_override)
+    B = shape.global_batch
+    cap = shape.seq_len
+
+    def decode_step(params, cache, tokens):
+        return model.decode(params, cache, tokens)
+
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_shard = sh.param_shardings(mesh, model.specs(), param_shapes, layout=_serve_layout(cfg))
+    cache_struct = model.cache_shapes(B, cap)
+    c_shard = {
+        "layers": sh.cache_shardings(
+            mesh, cache_struct["layers"], model.cache_specs()["layers"],
+            seq_axis=_cache_seq_axis(cfg, mesh),
+        ),
+        "pos": sh.replicated(mesh),
+    }
+    if cfg.n_codebooks > 1:
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks, 1), _tok_dtype())
+    else:
+        tok = jax.ShapeDtypeStruct((B, 1), _tok_dtype())
+    t_shard = sh.batch_shardings(mesh, tok, stacked=False)
+
+    return StepBundle(
+        name="decode_step",
+        fn=decode_step,
+        args=(param_shapes, cache_struct, tok),
+        in_shardings=(p_shard, c_shard, t_shard),
+        # logits sharding compiler-chosen; cache out mirrors cache in so the
+        # donation aliases cleanly
+        out_shardings=(None, c_shard),
+        meta={"cap": cap, "window_override": window_override},
+        donate_argnums=(1,),  # the cache is updated in place
+    )
+
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
+    """Dispatch on the shape kind, applying the documented long_500k policy."""
+    window_override = None
+    if shape.name == "long_500k":
+        if not cfg.supports_shape(shape):
+            raise ValueError(
+                f"{cfg.name} skips long_500k (full attention, no SW variant; see DESIGN.md)"
+            )
+        if not cfg.subquadratic:
+            window_override = cfg.sw_variant_window
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_decode_step(cfg, shape, mesh, window_override=window_override)

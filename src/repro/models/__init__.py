@@ -1,0 +1,4 @@
+"""Model substrate: layers, attention variants, MoE, RWKV6, RG-LRU, stack."""
+from repro.models.model import Model, build
+
+__all__ = ["Model", "build"]

@@ -1,0 +1,231 @@
+"""Attention variants: GQA (full / sliding-window / local), and DeepSeek-style
+MLA with a compressed KV cache (matrix-absorbed decode).
+
+Modes:
+  * ``train``   -- full sequence, no cache.
+  * ``prefill`` -- full sequence; returns a cache of capacity ``cache_cap``.
+  * ``decode``  -- one token against the cache; returns the updated cache.
+
+Caches (per layer):
+  GQA full:  {"k": (B, cap, Hkv, hd), "v": (B, cap, Hkv, vd)}
+  GQA ring (sliding/local window W): same with cap == W; slot = pos % W and
+      "k_pos": (W,) absolute position per slot (-1 = empty).
+  MLA:       {"ckv": (B, cap, kv_lora), "kr": (B, cap, rope_hd)}
+The scalar write position ``pos`` is carried once per model, not per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ArchConfig, dtype):
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wq, sq = L.dense_init(k1, (d, h, hd), ("embed", "heads", None), dtype)
+    wk, sk = L.dense_init(k2, (d, hkv, hd), ("embed", "kv", None), dtype)
+    wv, sv = L.dense_init(k3, (d, hkv, hd), ("embed", "kv", None), dtype)
+    wo, so = L.dense_init(k4, (h, hd, d), ("heads", None, "embed"), dtype, scale=1.0 / (h * hd) ** 0.5)
+    return {"wq": wq, "wk": wk, "wv": wv, "wo": wo}, {"wq": sq, "wk": sk, "wv": sv, "wo": so}
+
+
+def _rope_qk(q, k, q_pos, k_pos, theta):
+    cq, sq = L.rope_angles(q_pos, q.shape[-1], theta)
+    ck, sk = L.rope_angles(k_pos, k.shape[-1], theta)
+    return L.rope_apply(q, cq, sq), L.rope_apply(k, ck, sk)
+
+
+def gqa_apply(
+    cfg: ArchConfig,
+    params,
+    x,
+    *,
+    mode: str,
+    cache=None,
+    pos=None,
+    window: Optional[int] = None,
+    cache_cap: int = 0,
+):
+    """x: (B, S, D) (S == 1 in decode).  Returns (out, new_cache)."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S, dtype=jnp.int32)
+        q, k = _rope_qk(q, k, positions, positions, cfg.rope_theta)
+        out = ops.flash_attention(q, k, v, positions, positions, causal=True, window=window)
+        new_cache = None
+        if mode == "prefill":
+            if window is not None:
+                W = min(window, cache_cap or window)
+                kc = jnp.zeros((B, W, cfg.n_kv_heads, hd), k.dtype)
+                vc = jnp.zeros((B, W, cfg.n_kv_heads, hd), v.dtype)
+                # last W tokens land in slot pos % W
+                take = min(W, S)
+                src = jax.lax.dynamic_slice_in_dim(k, S - take, take, axis=1)
+                srcv = jax.lax.dynamic_slice_in_dim(v, S - take, take, axis=1)
+                slots = (jnp.arange(S - take, S) % W).astype(jnp.int32)
+                kc = kc.at[:, slots].set(src)
+                vc = vc.at[:, slots].set(srcv)
+                k_pos = jnp.full((W,), -1, jnp.int32).at[slots].set(jnp.arange(S - take, S, dtype=jnp.int32))
+                new_cache = {"k": kc, "v": vc, "k_pos": k_pos}
+            else:
+                cap = max(cache_cap, S)
+                pad = cap - S
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                new_cache = {"k": kc, "v": vc}
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache
+
+    # ---- decode ----
+    assert S == 1 and cache is not None and pos is not None
+    q_pos = jnp.asarray(pos, jnp.int32)
+    cq, sq = L.rope_angles(q_pos[None], hd, cfg.rope_theta)
+    q = L.rope_apply(q, cq[None], sq[None])
+    ck, sk = L.rope_angles(q_pos[None], hd, cfg.rope_theta)
+    k = L.rope_apply(k, ck[None], sk[None])
+    if window is not None:
+        W = cache["k"].shape[1]
+        slot = jnp.mod(q_pos, W)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        k_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_pos"], q_pos[None], slot, axis=0
+        )
+        out = ops.attend_cache(q, kc, vc, q_pos, k_pos, window=window)
+        new_cache = {"k": kc, "v": vc, "k_pos": k_pos}
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        cap = kc.shape[1]
+        k_pos = jnp.where(jnp.arange(cap) <= q_pos, jnp.arange(cap), -1).astype(jnp.int32)
+        out = ops.attend_cache(q, kc, vc, q_pos, k_pos, window=None)
+        new_cache = {"k": kc, "v": vc}
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache
+
+
+def gqa_cache_shape(cfg: ArchConfig, batch: int, cap: int, window: Optional[int], dtype):
+    hd = cfg.resolved_head_dim
+    if window is not None:
+        W = min(window, cap)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, W, cfg.n_kv_heads, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, W, cfg.n_kv_heads, hd), dtype),
+            "k_pos": jax.ShapeDtypeStruct((W,), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cap, cfg.n_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, cap, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope_d, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    wq, sq = L.dense_init(ks[0], (d, h, nope + rope_d), ("embed", "heads", None), dtype)
+    wdkv, sdkv = L.dense_init(ks[1], (d, kvl + rope_d), ("embed", None), dtype)
+    wuk, suk = L.dense_init(ks[2], (kvl, h, nope), (None, "heads", None), dtype)
+    wuv, suv = L.dense_init(ks[3], (kvl, h, vd), (None, "heads", None), dtype)
+    wo, so = L.dense_init(ks[4], (h, vd, d), ("heads", None, "embed"), dtype, scale=1.0 / (h * vd) ** 0.5)
+    nrm, nrm_s = L.norm_init("rmsnorm", kvl)
+    nrm_s = {k: (None,) for k in nrm}
+    return (
+        {"wq": wq, "wdkv": wdkv, "wuk": wuk, "wuv": wuv, "wo": wo, "ckv_norm": nrm},
+        {"wq": sq, "wdkv": sdkv, "wuk": suk, "wuv": suv, "wo": so, "ckv_norm": nrm_s},
+    )
+
+
+def mla_apply(cfg: ArchConfig, params, x, *, mode: str, cache=None, pos=None, cache_cap: int = 0):
+    B, S, D = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    scale_dim = nope + rope_d
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])  # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = x @ params["wdkv"]  # (B,S,kvl+rope)
+    ckv = L.norm_apply("rmsnorm", params["ckv_norm"], dkv[..., :kvl])
+    k_rope = dkv[..., kvl:][:, :, None, :]  # (B,S,1,rope)
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cq, sq_ = L.rope_angles(positions, rope_d, cfg.rope_theta)
+        q_rope = L.rope_apply(q_rope, cq[None], sq_[None])
+        k_rope = L.rope_apply(k_rope, cq[None], sq_[None])
+        k_nope = jnp.einsum("bsl,lhk->bshk", ckv, params["wuk"])
+        v = jnp.einsum("bsl,lhk->bshk", ckv, params["wuv"])
+        k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, h, rope_d))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = ops.flash_attention(q_full, k_full, v, positions, positions, causal=True)
+        new_cache = None
+        if mode == "prefill":
+            cap = max(cache_cap, S)
+            pad = cap - S
+            new_cache = {
+                "ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+                "kr": jnp.pad(k_rope[:, :, 0, :], ((0, 0), (0, pad), (0, 0))),
+            }
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache
+
+    # ---- decode: matrix-absorbed attention over the compressed cache ----
+    assert S == 1 and cache is not None and pos is not None
+    q_pos = jnp.asarray(pos, jnp.int32)
+    cq, sq_ = L.rope_angles(q_pos[None], rope_d, cfg.rope_theta)
+    q_rope = L.rope_apply(q_rope, cq[None], sq_[None])
+    k_rope = L.rope_apply(k_rope, cq[None], sq_[None])
+    ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, pos, axis=1)
+    kr_c = jax.lax.dynamic_update_slice_in_dim(cache["kr"], k_rope[:, :, 0, :], pos, axis=1)
+    cap = ckv_c.shape[1]
+    # absorb W_uk into q: q_c[b,h,l] = sum_n q_nope[b,h,n] wuk[l,h,n]
+    q_c = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0].astype(jnp.float32), params["wuk"].astype(jnp.float32))
+    s_nope = jnp.einsum("bhl,bkl->bhk", q_c, ckv_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bkr->bhk", q_rope[:, 0].astype(jnp.float32), kr_c.astype(jnp.float32))
+    s = (s_nope + s_rope) / jnp.sqrt(scale_dim).astype(jnp.float32)
+    valid = jnp.arange(cap) <= q_pos
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhk,bkl->bhl", p, ckv_c.astype(jnp.float32))  # (B,H,kvl)
+    out = jnp.einsum("bhl,lhv->bhv", ctx_c, params["wuv"].astype(jnp.float32))
+    out = out[:, None].astype(x.dtype)  # (B,1,H,vd)
+    return (
+        jnp.einsum("bshk,hkd->bsd", out, params["wo"]),
+        {"ckv": ckv_c, "kr": kr_c},
+    )
+
+
+def mla_cache_shape(cfg: ArchConfig, batch: int, cap: int, dtype):
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, cap, cfg.kv_lora_rank), dtype),
+        "kr": jax.ShapeDtypeStruct((batch, cap, cfg.rope_head_dim), dtype),
+    }
+
+
+def gqa_cache_spec(window):
+    if window is not None:
+        return {"k": ("batch", "seq", "kv", None), "v": ("batch", "seq", "kv", None), "k_pos": ("seq",)}
+    return {"k": ("batch", "seq", "kv", None), "v": ("batch", "seq", "kv", None)}
+
+
+def mla_cache_spec():
+    return {"ckv": ("batch", "seq", None), "kr": ("batch", "seq", None)}

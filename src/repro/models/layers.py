@@ -1,0 +1,156 @@
+"""Shared layers: norms, rotary embeddings, gated MLPs, init helpers.
+
+Every init function returns ``(params, specs)`` where ``specs`` mirrors the
+param pytree with tuples of *logical* axis names per dim.  Logical axes are
+mapped to mesh axes by ``repro.sharding.specs``:
+
+    embed   -- model dimension rows (FSDP-shardable)
+    ff      -- feed-forward hidden
+    heads   -- attention heads (q)
+    kv      -- kv heads
+    vocab   -- vocabulary
+    experts -- MoE experts
+    rnn     -- recurrent width
+    None    -- replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Specs = Any
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, dtype, scale: Optional[float] = None):
+    """Normal(0, scale) init; default scale = 1/sqrt(fan_in)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    w = (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+    return w, tuple(axes)
+
+
+def zeros_init(shape, axes, dtype):
+    return jnp.zeros(shape, dtype=dtype), tuple(axes)
+
+
+def const_init(value, shape, axes, dtype):
+    return jnp.full(shape, value, dtype=dtype), tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(kind: str, dim: int):
+    """Norm params are always f32."""
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), jnp.float32)}, {"scale": ("embed",)}
+    if kind == "layernorm":
+        return (
+            {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)},
+            {"scale": ("embed",), "bias": ("embed",)},
+        )
+    if kind == "nonparam_ln":  # OLMo: no learnable affine
+        return {}, {}
+    raise ValueError(kind)
+
+
+def norm_apply(kind: str, params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        y = y * params["scale"]
+    elif kind in ("layernorm", "nonparam_ln"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["scale"] + params["bias"]
+    else:
+        raise ValueError(kind)
+    return y.astype(dt)
+
+
+def groupnorm_heads(x, n_heads, eps: float = 64e-5):
+    """Per-head LayerNorm used on the RWKV wkv output. x: (..., H*hd)."""
+    dt = x.dtype
+    shp = x.shape
+    xf = x.astype(jnp.float32).reshape(*shp[:-1], n_heads, shp[-1] // n_heads)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.reshape(shp).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) -> (cos, sin) of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x, cos, sin):
+    """x (..., S, H, hd) with cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over head axis
+    s = sin[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    wi, si = dense_init(k1, (d_model, d_ff), ("embed", "ff"), dtype)
+    wg, sg = dense_init(k2, (d_model, d_ff), ("embed", "ff"), dtype)
+    wo, so = dense_init(k3, (d_ff, d_model), ("ff", "embed"), dtype)
+    return {"wi": wi, "wg": wg, "wo": wo}, {"wi": si, "wg": sg, "wo": so}
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    h = x @ params["wi"]
+    g = x @ params["wg"]
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (h * g) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, dtype):
+    w, s = dense_init(key, (vocab, d_model), ("vocab", "embed"), dtype, scale=1.0)
+    return {"w": w}, {"w": s}
+
+
+def embed_apply(params, tokens):
+    return jnp.take(params["w"], tokens, axis=0)
+
+
+def head_apply(embed_or_head_w, x):
+    """x (..., D) @ W^T -> logits (..., V). f32 logits for a stable softmax."""
+    return (x @ embed_or_head_w.T.astype(x.dtype)).astype(jnp.float32)

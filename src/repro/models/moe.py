@@ -1,0 +1,156 @@
+"""Token-choice top-k MoE with capacity-based dispatch (TPU-friendly: static
+shapes, sort-free gather/scatter by expert slot) + shared experts.
+
+The routed path materialises (E, C, D) expert inputs where the capacity
+C = ceil(top_k * T / E * capacity_factor); tokens overflowing an expert's
+capacity are dropped for that slot (standard Switch/MaxText behaviour).
+An auxiliary load-balance loss (Switch-style) is returned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    wr, sr = L.dense_init(ks[0], (d, e), ("embed", None), dtype)
+    wi, si = L.dense_init(ks[1], (e, d, ff), ("experts", "embed", "ff"), dtype)
+    wg, sg = L.dense_init(ks[2], (e, d, ff), ("experts", "embed", "ff"), dtype)
+    wo, so = L.dense_init(ks[3], (e, ff, d), ("experts", "ff", "embed"), dtype)
+    params = {"router": wr, "wi": wi, "wg": wg, "wo": wo}
+    specs = {"router": sr, "wi": si, "wg": sg, "wo": so}
+    if cfg.n_shared_experts:
+        sh, shs = L.mlp_init(ks[4], d, cfg.n_shared_experts * ff, dtype)
+        params["shared"] = sh
+        specs["shared"] = shs
+    return params, specs
+
+
+def moe_apply(cfg: ArchConfig, params, x, act: str = "silu", full_capacity: bool = False,
+              fused: Optional[bool] = None):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    ``full_capacity`` (decode): capacity == T so no token is ever dropped --
+    the decode batch is tiny and drops would make cached decoding diverge
+    from the teacher-forced forward.
+
+    Two dispatch strategies (see EXPERIMENTS.md SSPerf H1):
+
+    * per-slot loop (baseline, ``cfg.moe_fused_dispatch=False``): one
+      gather/ffn/scatter per top-k slot.  With experts sharded over "model",
+      every slot's scatter-add is a separate f32 (T, D) all-reduce -- k big
+      collectives per MoE layer.
+    * fused (``True``): ONE dispatch over all (token, slot) choices sharing
+      the same per-expert capacity, so the expert-combine is a single psum,
+      and the partial sums are cast to the activation dtype before crossing
+      the mesh (bf16 instead of f32 on the wire).
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)  # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)  # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = T if full_capacity else max(1, int((k * T / E) * CAPACITY_FACTOR))
+    if cfg.moe_fused_dispatch if fused is None else fused:
+        return _moe_fused(cfg, params, x, xt, topv, topi, gates, cap, act)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)  # sentinel row
+    token_ids = jnp.arange(T, dtype=jnp.int32)
+
+    out = jnp.zeros((T, D), jnp.float32)
+    # track per-(token,slot) position within the chosen expert across slots so
+    # capacity is shared between slots of the same expert
+    counts = jnp.zeros((E,), jnp.int32)
+    for j in range(k):
+        e_j = topi[:, j]  # (T,)
+        onehot = jax.nn.one_hot(e_j, E, dtype=jnp.int32)  # (T, E)
+        pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # (T, E)
+        pos = pos_in_e.sum(-1) + counts[e_j]  # (T,)
+        counts = counts + onehot.sum(0)
+        slot = jnp.where(pos < cap, pos, cap)  # cap -> dropped (oob)
+        # scatter token ids into (E, cap); untouched slots point at sentinel T
+        idx = jnp.full((E, cap), T, jnp.int32)
+        idx = idx.at[e_j, slot].set(token_ids, mode="drop")
+        xg = xt_pad[idx]  # (E, cap, D)
+        h = jnp.einsum("ecd,edf->ecf", xg, params["wi"])
+        g = jnp.einsum("ecd,edf->ecf", xg, params["wg"])
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        y = jnp.einsum("ecf,efd->ecd", h * g, params["wo"]).astype(jnp.float32)
+        # combine weight per (e, c): gate of the token occupying the slot
+        w_ec = jnp.where(idx < T, topv[jnp.minimum(idx, T - 1), j], 0.0)
+        out = out.at[idx.reshape(-1)].add(
+            (y * w_ec[..., None]).reshape(-1, D), mode="drop"
+        )
+
+    out = out.astype(x.dtype)
+    if cfg.n_shared_experts:
+        out = out + L.mlp_apply(params["shared"], xt, act)
+
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    frac = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (T * k)
+    pmean = gates.mean(0)
+    aux = E * jnp.sum(frac * pmean)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_fused(cfg: ArchConfig, params, x, xt, topv, topi, gates, cap, act):
+    """Single-dispatch routed path: all k slots share one (E, cap) buffer.
+
+    The per-expert capacity semantics match the loop path (capacity shared
+    across slots); only the *priority order* under overflow differs
+    (token-major here vs slot-major in the loop) -- identical whenever no
+    token is dropped, property-tested in tests/test_archs.py.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+
+    e_flat = topi.reshape(-1)  # (T*k,) token-major: choice f = t*k + j
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (T*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # running slot per expert
+    slot = jnp.where(pos.sum(-1) < cap, pos.sum(-1), cap)  # cap -> dropped
+
+    # scatter flat-choice ids into (E, cap); empty slots point at sentinel T*k
+    fidx = jnp.full((E, cap), T * k, jnp.int32)
+    fidx = fidx.at[e_flat, slot].set(jnp.arange(T * k, dtype=jnp.int32), mode="drop")
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+    tok = jnp.where(fidx < T * k, fidx // k, T)  # sentinel row T
+    xg = xt_pad[tok]  # (E, cap, D) -- ONE gather for all slots
+    h = jnp.einsum("ecd,edf->ecf", xg, params["wi"])
+    g = jnp.einsum("ecd,edf->ecf", xg, params["wg"])
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    y = jnp.einsum("ecf,efd->ecd", h * g, params["wo"]).astype(jnp.float32)
+
+    w_ec = jnp.where(
+        fidx < T * k, topv.reshape(-1)[jnp.minimum(fidx, T * k - 1)], 0.0
+    )
+    # gate-weighting in f32, then accumulate the combine in the activation
+    # dtype so the cross-expert psum over the "model" axis (and its backward
+    # twin) travels in bf16, not f32: each (token, slot) contribution lives on
+    # exactly one device, so the scatter merges <= top_k values per token and
+    # the cross-device sum merges disjoint expert outputs -- bf16-safe.
+    contrib = (y * w_ec[..., None]).astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype)
+    out = out.at[tok.reshape(-1)].add(contrib.reshape(-1, D), mode="drop")
+    if cfg.n_shared_experts:
+        out = out + L.mlp_apply(params["shared"], xt, act)
+
+    frac = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(frac * gates.mean(0))
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,99 @@
+"""Griffin/RecurrentGemma recurrent block: input/gate branches, short causal
+depthwise conv, and the RG-LRU (real-gated linear recurrent unit):
+
+    i_t = sigmoid(blockdiag(W_x) x_t)            (input gate)
+    r_t = sigmoid(blockdiag(W_a) x_t)            (recurrence gate)
+    log a_t = -c * softplus(Lambda) * r_t         (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Train/prefill uses an associative scan; decode is a single step with carried
+state {"h": (B, d_rnn), "conv": (B, conv_width-1, d_rnn)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+RG_C = 8.0
+
+
+def rglru_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    dr = cfg.rec_d_state or d
+    h = cfg.n_heads
+    bd = dr // h  # block-diagonal gate width
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = L.dense_init(ks[0], (d, dr), ("embed", "rnn"), dtype)
+    p["w_gate"], s["w_gate"] = L.dense_init(ks[1], (d, dr), ("embed", "rnn"), dtype)
+    p["w_out"], s["w_out"] = L.dense_init(ks[2], (dr, d), ("rnn", "embed"), dtype)
+    p["conv_k"], s["conv_k"] = L.dense_init(ks[3], (cfg.conv_width, dr), (None, "rnn"), dtype, scale=0.5)
+    p["gx"], s["gx"] = L.dense_init(ks[4], (h, bd, bd), ("heads", None, None), dtype)
+    p["ga"], s["ga"] = L.dense_init(ks[5], (h, bd, bd), ("heads", None, None), dtype)
+    # Lambda parameterised so a ~ U(0.9, 0.999) at init
+    lam = jax.random.uniform(ks[6], (dr,), minval=2.5, maxval=5.0)
+    p["lam"], s["lam"] = lam.astype(jnp.float32), ("rnn",)
+    return p, s
+
+
+def _causal_conv(x, kernel, state):
+    """Depthwise causal conv.  x: (B,S,Dr), kernel: (W,Dr), state: (B,W-1,Dr)."""
+    W = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, Dr)
+    out = sum(xp[:, i : i + x.shape[1]] * kernel[i] for i in range(W))
+    return out, xp[:, -(W - 1) :]
+
+
+def rglru_apply(cfg: ArchConfig, params, x, *, mode: str, state=None):
+    """x: (B,S,D) normalized block input -> (out, new_state)."""
+    B, S, D = x.shape
+    dr = cfg.rec_d_state or D
+    h = cfg.n_heads
+    bd = dr // h
+    xin = x @ params["w_in"]  # (B,S,Dr)
+    gate = jax.nn.gelu(x @ params["w_gate"])
+
+    conv_state = state["conv"] if state is not None else None
+    xc, conv_new = _causal_conv(xin, params["conv_k"], conv_state)
+
+    xh = xc.reshape(B, S, h, bd)
+    i_t = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", xh, params["gx"])).reshape(B, S, dr)
+    r_t = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", xh, params["ga"])).reshape(B, S, dr)
+    log_a = (-RG_C * jax.nn.softplus(params["lam"]) * r_t.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    b_scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = b_scale * (i_t.astype(jnp.float32) * xc.astype(jnp.float32))
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, dr), jnp.float32)
+    if mode == "decode":
+        hs = a[:, 0] * h0 + b[:, 0]
+        y = hs[:, None].astype(x.dtype)
+        h_last = hs
+    else:
+        y, h_last = ops.lru_scan(a, b, h0)
+        y = y.astype(x.dtype)
+
+    out = (y * gate) @ params["w_out"]
+    new_state = None
+    if mode != "train":
+        new_state = {"h": h_last, "conv": conv_new}
+    return out, new_state
+
+
+def rglru_state_shape(cfg: ArchConfig, batch: int, dtype):
+    dr = cfg.rec_d_state or cfg.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, dr), dtype),
+    }
+
+
+def rglru_state_spec():
+    return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}

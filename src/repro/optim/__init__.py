@@ -1,0 +1,13 @@
+"""Local optimizers (substrate -- no optax in this environment)."""
+from repro.optim.optimizers import adam, sgd, apply_updates, clip_by_global_norm
+from repro.optim.schedules import constant, cosine, linear_warmup
+
+__all__ = [
+    "adam",
+    "sgd",
+    "apply_updates",
+    "clip_by_global_norm",
+    "constant",
+    "cosine",
+    "linear_warmup",
+]

@@ -1,0 +1,73 @@
+"""Minimal optax-style optimizers as (init, update) pairs over pytrees.
+
+The federated core has its own update rules (GPDMM's prox-gradient step);
+these are the plain local optimizers used by the non-federated baselines and
+the serving-side tooling.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+            upd = jax.tree.map(lambda m: -lr_fn(step) * m, mom)
+            return upd, {"step": step, "mom": mom}
+        upd = jax.tree.map(lambda g: -lr_fn(step) * g, grads)
+        return upd, {"step": step, "mom": None}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        t = step.astype(jnp.float32)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1**t), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2**t), nu)
+        upd = jax.tree.map(
+            lambda m, v, p: (-lr_fn(step) * (m / (jnp.sqrt(v) + eps) + weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+            mu_hat, nu_hat, params,
+        )
+        return upd, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads))
+    gn = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn

@@ -1,0 +1,27 @@
+"""Mesh-axis rules + NamedSharding builders for params, federated state,
+batches and serving caches."""
+from repro.sharding.specs import (
+    batch_shardings,
+    cache_shardings,
+    client_axes,
+    axis_size,
+    logical_rules,
+    logits_shardings,
+    param_shardings,
+    replicated,
+    spec_to_pspec,
+    stacked_shardings,
+)
+
+__all__ = [
+    "batch_shardings",
+    "cache_shardings",
+    "client_axes",
+    "axis_size",
+    "logical_rules",
+    "logits_shardings",
+    "param_shardings",
+    "replicated",
+    "spec_to_pspec",
+    "stacked_shardings",
+]

@@ -1,0 +1,32 @@
+"""Mesh-aware activation sharding constraints.
+
+Model code is mesh-agnostic: ``constrain(x, None, None, "model")`` is a no-op
+when no mesh is active (CPU smoke tests) or when the named axes don't exist /
+don't divide the dim; under ``jax.set_mesh(production_mesh)`` it pins the
+activation layout so GSPMD doesn't materialise unsharded giants (the
+vocab-sharded logits constraint alone is worth ~13 GiB/device on olmo-1b).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, *axes):
+    """axes: one entry per dim of x -- a mesh-axis name, tuple of names, or
+    None.  Silently no-ops outside a mesh context."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        cand = (ax,) if isinstance(ax, str) else tuple(ax) if ax else ()
+        if cand and set(cand) <= names:
+            size = 1
+            for a in cand:
+                size *= mesh.shape[a]
+            spec.append(ax if dim % size == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

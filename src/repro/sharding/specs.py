@@ -1,0 +1,177 @@
+"""Logical-axis -> mesh-axis rules and NamedSharding builders.
+
+Logical axes produced by the model init specs:
+  embed | embed2 | ff | heads | kv | vocab | experts | rnn | unit | None
+
+Two federated layouts (see FederatedConfig.layout):
+
+* ``client_axis`` -- the faithful star-graph mapping: stacked per-client state
+  (leading dim m == product of client axes) is sharded over ("data",) /
+  ("pod","data"); parameter dims use tensor parallelism over "model".
+  The server aggregation is ONE all-reduce over the client axes.
+
+* ``fsdp`` -- for models whose duals cannot fit at m == |client axes|
+  (llama4-maverick, yi-34b): small m, client dim replicated, and the
+  "embed" logical axis additionally sharded over the data axes
+  (fully-sharded parameters; XLA inserts the FSDP all-gathers).
+
+Serving has no clients: batch over the data axes, TP over "model".
+A dim is only sharded when its size divides the mesh-axis product (e.g.
+kv=8 heads stay replicated on a 16-way model axis -- standard GQA practice).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def client_axes(mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def logical_rules(mesh, *, layout: str) -> dict:
+    """logical axis name -> mesh axes (or None)."""
+    fsdp = client_axes(mesh) if layout == "fsdp" else None
+    return {
+        "embed": fsdp,
+        "embed2": None,
+        "ff": "model",
+        "heads": "model",
+        "kv": "model",
+        "vocab": "model",
+        "experts": "model",
+        "rnn": "model",
+        "unit": None,
+        "clients": client_axes(mesh) if layout == "client_axis" else None,
+        None: None,
+    }
+
+
+def spec_to_pspec(mesh, spec: tuple, shape: tuple, rules: dict) -> P:
+    """Drops shardings that don't divide the dim size; a mesh axis is used at
+    most once per tensor (first logical axis wins -- e.g. MoE (experts, embed,
+    ff) keeps experts on "model" and leaves ff replicated)."""
+    out = []
+    used: set = set()
+    for ax_name, dim in zip(spec, shape):
+        mesh_axes = rules.get(ax_name)
+        cand = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes or ())
+        if (
+            not cand
+            or (set(cand) & used)
+            or dim % axis_size(mesh, mesh_axes) != 0
+        ):
+            out.append(None)
+        else:
+            out.append(mesh_axes)
+            used.update(cand)
+    return P(*out)
+
+
+def param_shardings(mesh, specs, shapes, *, layout: str):
+    """specs: logical-axis pytree from model.specs(); shapes: matching
+    ShapeDtypeStruct pytree.  Returns a NamedSharding pytree."""
+    rules = logical_rules(mesh, layout=layout)
+
+    def one(spec, sds):
+        return NamedSharding(mesh, spec_to_pspec(mesh, spec, sds.shape, rules))
+
+    return jax.tree.map(one, specs, shapes, is_leaf=lambda t: isinstance(t, tuple))
+
+
+def stacked_shardings(mesh, server_shardings, *, layout: str):
+    """Sharding for per-client stacked state (leading dim m): prepend the
+    client axes (client_axis layout) or None (fsdp layout)."""
+    cax = client_axes(mesh) if layout == "client_axis" else None
+
+    def one(ns: NamedSharding):
+        return NamedSharding(mesh, P(cax, *ns.spec))
+
+    return jax.tree.map(one, server_shardings)
+
+
+def batch_shardings(mesh, batch_shapes, *, stacked: bool, layout: str = "client_axis"):
+    """Token/target/patch arrays: leading client dim (if stacked) over the
+    client axes, then the per-client batch dim over the data axes in fsdp
+    layout (client dim is not a mesh axis there)."""
+    cax = client_axes(mesh)
+
+    def one(sds):
+        dims: list = [None] * len(sds.shape)
+        if stacked:
+            if layout == "client_axis":
+                if sds.shape[0] % axis_size(mesh, cax) == 0:
+                    dims[0] = cax
+            else:  # fsdp: shard the per-client batch dim instead
+                if len(sds.shape) > 1 and sds.shape[1] % axis_size(mesh, cax) == 0:
+                    dims[1] = cax
+        else:
+            if sds.shape[0] % axis_size(mesh, cax) == 0:
+                dims[0] = cax
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_rules(mesh, seq_axis: Optional[str] = None) -> dict:
+    """Logical axes emitted by model.cache_specs().
+
+    ``seq_axis``: opt-in sequence sharding of the KV cache (SSPerf H2) --
+    used when the kv-head dim cannot divide the model axis (GQA kv=8 on a
+    16-way axis) or the cache has no head dim at all (MLA compressed KV);
+    the decode softmax then runs over a sharded key dim (GSPMD inserts the
+    small score gather, ~MiBs, to save GiBs of cache per device).
+    """
+    return {
+        "batch": client_axes(mesh),
+        "kv": "model",
+        "heads": "model",
+        "rnn": "model",
+        "unit": None,
+        "seq": seq_axis,
+        None: None,
+    }
+
+
+def cache_shardings(mesh, cache_shapes, cache_specs, seq_axis: Optional[str] = None):
+    """Spec-driven cache sharding (specs from ``model.cache_specs()``)."""
+    rules = cache_rules(mesh, seq_axis=seq_axis)
+
+    def one(sds, spec):
+        return NamedSharding(mesh, spec_to_pspec(mesh, spec, sds.shape, rules))
+
+    return jax.tree.map(
+        lambda sds, spec: one(sds, spec),
+        cache_shapes,
+        cache_specs,
+        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct),
+    )
+
+
+def logits_shardings(mesh, sds):
+    """Last-token logits (B, ..., V): batch over the data axes, vocab over
+    "model" (both gated on divisibility)."""
+    cax = client_axes(mesh)
+    dims: list = [None] * len(sds.shape)
+    if sds.shape[0] % axis_size(mesh, cax) == 0:
+        dims[0] = cax
+    if sds.shape[-1] % axis_size(mesh, "model") == 0:
+        dims[-1] = "model"
+    return NamedSharding(mesh, P(*dims))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

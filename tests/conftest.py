@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count forcing here -- smoke
+tests and benches must see the real (single) CPU device; only
+repro.launch.dryrun/roofline force 512 host devices, in subprocesses."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,182 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant of
+each family runs one forward + one federated train round on CPU, asserting
+output shapes and finiteness; plus the decode-vs-full-forward consistency
+check that exercises every cache type (KV, ring, MLA-compressed, wkv state,
+RG-LRU state)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import FederatedConfig
+from repro.core import make as make_fed
+from repro.models import build
+from repro.models.model import forward
+
+ARCH_NAMES = list(ARCHS)
+
+
+def _batch(cfg, key, B=2, S=24, with_targets=True):
+    if cfg.n_codebooks > 1:
+        toks = jax.random.randint(key, (B, cfg.n_codebooks, S), 0, cfg.vocab_size)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    b = {"tokens": toks}
+    if with_targets:
+        b["targets"] = toks
+    if cfg.frontend == "vision":
+        b["patches"] = jax.random.normal(
+            jax.random.fold_in(key, 9), (B, cfg.n_prefix_tokens, cfg.frontend_dim)
+        )
+    return b
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_forward_shapes(name, key):
+    cfg = ARCHS[name].reduced()
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512 and cfg.n_experts <= 4
+    m = build(cfg)
+    params = m.init(key)
+    b = _batch(cfg, key, with_targets=False)
+    logits = m.apply(params, b)
+    B, S = 2, 24
+    S_total = S + (cfg.n_prefix_tokens if cfg.frontend == "vision" else 0)
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_train_round(name, key):
+    """One GPDMM federated round on the reduced config: loss finite, state
+    structurally stable, dual-sum invariant holds."""
+    cfg = ARCHS[name].reduced()
+    fed_cfg = FederatedConfig(algorithm="gpdmm", inner_steps=2, eta=0.05)
+    model = build(cfg)
+    params = model.init(key)
+    m = 2
+    fed = make_fed(fed_cfg)
+    state = fed.init(params, m)
+    batch = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        _batch(cfg, jax.random.fold_in(key, 1)),
+        _batch(cfg, jax.random.fold_in(key, 2)),
+    )
+
+    def grad_fn(p, b):
+        return jax.grad(lambda q: model.loss(q, b)[0])(p)
+
+    new_state, metrics = jax.jit(lambda s, b: fed.round(s, grad_fn, b))(state, batch)
+    assert float(metrics["lam_sum_norm"]) < 1e-2, name
+    for leaf in jax.tree.leaves(new_state):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), name
+    # loss at the new server params is finite
+    loss, _ = model.loss(fed.server_params(new_state), jax.tree.map(lambda x: x[0], batch))
+    assert bool(jnp.isfinite(loss)), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_full_forward(name, key):
+    cfg = ARCHS[name].reduced()
+    wo = 16 if cfg.sw_variant_window else None
+    m = build(cfg, window_override=wo)
+    params = m.init(key)
+    B, S = 2, 24
+    full_b = _batch(cfg, key, B, S, with_targets=False)
+    if cfg.n_codebooks > 1:
+        pre_tokens = full_b["tokens"][:, :, : S - 1]
+        last = full_b["tokens"][:, :, S - 1 :]
+    else:
+        pre_tokens = full_b["tokens"][:, : S - 1]
+        last = full_b["tokens"][:, S - 1 :]
+    pre_b = dict(full_b, tokens=pre_tokens)
+    pre_b.pop("targets", None)
+
+    P = cfg.n_prefix_tokens if cfg.frontend == "vision" else 0
+    # exact-inference reference: prefill of the FULL sequence with drop-free
+    # MoE routing (same math as a teacher-forced forward), so the check
+    # isolates cache correctness.  The whole pipeline (ref, cache-building
+    # prefill, decode) uses exact routing -- capacity drops in any stage would
+    # legitimately change hidden states and poison the comparison.
+    ref, _ = m.prefill(params, full_b, P + S + 2, exact_moe=True)
+    _, cache = m.prefill(params, pre_b, P + S + 2, exact_moe=True)
+    lg_dec, new_cache = m.decode(params, cache, last)
+    rel = float(jnp.max(jnp.abs(lg_dec - ref))) / (float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 2e-2, (name, rel)
+    assert int(new_cache["pos"]) == int(cache["pos"]) + 1
+    if not any(k == "moe" for k in cfg.block_pattern):
+        # without routed experts, train forward == inference forward exactly
+        logits_full, _, _ = forward(cfg, params, full_b, mode="train", window_override=wo)
+        ref_t = logits_full[:, -1]
+        rel_t = float(jnp.max(jnp.abs(lg_dec - ref_t))) / (float(jnp.max(jnp.abs(ref_t))) + 1e-9)
+        assert rel_t < 2e-2, (name, rel_t)
+
+
+@pytest.mark.parametrize("name", ["deepseek-v2-lite-16b", "llama4-maverick-400b-a17b"])
+def test_moe_fused_dispatch_matches_loop(name, key):
+    """The H1 fused dispatch must agree with the per-slot loop whenever no
+    token is dropped (full capacity): identical routing, one combine."""
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg = ARCHS[name].reduced()
+    cfg_f = dataclasses.replace(cfg, moe_fused_dispatch=True)
+    params, _ = moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model))
+    out_loop, aux_loop = moe_apply(cfg, params, x, full_capacity=True)
+    out_fused, aux_fused = moe_apply(cfg_f, params, x, full_capacity=True)
+    np.testing.assert_allclose(np.asarray(out_fused), np.asarray(out_loop),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(float(aux_fused), float(aux_loop), rtol=1e-6)
+    # under capacity pressure both still produce finite outputs & equal aux
+    out_c, _ = moe_apply(cfg_f, params, x, full_capacity=False)
+    assert bool(jnp.isfinite(out_c).all())
+
+
+def test_param_counts_match_published():
+    expect = {
+        "llama3-8b": 8.0e9,
+        "yi-34b": 34.4e9,
+        "olmo-1b": 1.18e9,
+        "deepseek-v2-lite-16b": 15.7e9,
+        "musicgen-large": 3.3e9,
+        "stablelm-12b": 12.1e9,
+    }
+    for name, n in expect.items():
+        got = ARCHS[name].param_count()
+        assert abs(got - n) / n < 0.06, (name, got, n)
+    # llama4: total ~400B, active ~17B (a17b)
+    l4 = ARCHS["llama4-maverick-400b-a17b"]
+    assert 3.5e11 < l4.param_count() < 4.5e11
+    assert 1.0e10 < l4.active_param_count() < 2.0e10
+
+
+def test_long_500k_policy():
+    from repro.configs import SHAPES
+    long = SHAPES["long_500k"]
+    runs = {n for n, c in ARCHS.items() if c.supports_shape(long)}
+    assert runs == {"rwkv6-1.6b", "recurrentgemma-9b", "llama3-8b"}
+
+
+def test_ring_cache_wraparound(key):
+    """Sliding-window decode must stay consistent with the full forward after
+    the ring buffer wraps (pos > W): recurrentgemma's local blocks with W=8,
+    decoding 12 tokens beyond an 8-token prefill."""
+    cfg = dataclasses.replace(ARCHS["recurrentgemma-9b"].reduced(), window=8)
+    m = build(cfg)
+    params = m.init(key)
+    B, S_pre, S_total = 1, 8, 20
+    toks = jax.random.randint(key, (B, S_total), 0, cfg.vocab_size)
+
+    _, cache = m.prefill(params, {"tokens": toks[:, :S_pre]}, S_total + 2)
+    for t in range(S_pre, S_total):
+        lg_dec, cache = m.decode(params, cache, toks[:, t : t + 1])
+
+    logits_full, _, _ = forward(cfg, params, {"tokens": toks}, mode="train")
+    ref = logits_full[:, -1]
+    rel = float(jnp.max(jnp.abs(lg_dec - ref))) / (float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 2e-2, rel

@@ -1,0 +1,83 @@
+"""Data-pipeline and checkpoint substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro.data import partition, synthetic
+
+
+def test_by_class_partition_is_heterogeneous():
+    ds = synthetic.gaussian_mixture_images(jax.random.key(0), 50, 10)
+    xs, ys = partition.by_class(ds.x_train, ds.y_train, ds.n_classes)
+    assert xs.shape[0] == 10
+    for c in range(10):
+        assert bool((ys[c] == c).all())
+
+
+def test_iid_partition_covers():
+    key = jax.random.key(1)
+    x = jnp.arange(100 * 3, dtype=jnp.float32).reshape(100, 3)
+    y = jnp.arange(100) % 10
+    xs, ys = partition.iid(key, x, y, m=4)
+    assert xs.shape == (4, 25, 3)
+    # no sample duplicated
+    flat = np.asarray(xs[..., 0].reshape(-1))
+    assert len(np.unique(flat)) == 100
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 8), alpha=st.floats(0.1, 5.0))
+def test_dirichlet_partition_covers_all(m, alpha):
+    key = jax.random.key(int(alpha * 100) + m)
+    y = jnp.asarray(np.random.default_rng(0).integers(0, 5, 200))
+    idx = partition.dirichlet(key, None, y, m=m, n_classes=5, alpha=alpha)
+    allidx = np.concatenate(idx)
+    assert sorted(allidx.tolist()) == list(range(200))
+
+
+def test_minibatch_schedule_deterministic():
+    s1 = partition.minibatch_schedule(1000, 32, 50)
+    s2 = partition.minibatch_schedule(1000, 32, 50)
+    np.testing.assert_array_equal(s1, s2)
+    assert (s1 + 32 <= 1000).all()
+
+
+def test_lm_batches_heterogeneous():
+    gen = synthetic.lm_batches(jax.random.key(0), 1, m=3, per_client_batch=2,
+                               seq_len=32, vocab=128)
+    batch = next(gen)
+    assert batch["tokens"].shape == (3, 2, 32)
+    assert batch["targets"].shape == (3, 2, 32)
+    # different clients draw from different topic permutations
+    h0 = np.bincount(np.asarray(batch["tokens"][0]).ravel(), minlength=128)
+    h1 = np.bincount(np.asarray(batch["tokens"][1]).ravel(), minlength=128)
+    assert not np.array_equal(h0, h1)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": [jnp.int32(3), jnp.zeros((2, 2))]},
+        "e": (jnp.asarray(2.5),),
+        "meta": 7,
+    }
+    ckpt.save(tmp_path, 3, tree)
+    assert ckpt.latest_step(tmp_path) == 3
+    back = ckpt.load(tmp_path)
+    assert back["meta"] == 7
+    assert isinstance(back["e"], tuple) and isinstance(back["b"]["d"], list)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert back["b"]["c"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(back["b"]["c"], np.float32), np.ones(4, np.float32)
+    )
+
+
+def test_checkpoint_multiple_steps(tmp_path):
+    for s in [1, 5, 3]:
+        ckpt.save(tmp_path, s, {"x": jnp.asarray(float(s))})
+    assert ckpt.latest_step(tmp_path) == 5
+    assert float(ckpt.load(tmp_path, 3)["x"]) == 3.0

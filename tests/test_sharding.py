@@ -1,0 +1,125 @@
+"""Sharding-rule unit/property tests (pure: no multi-device requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs import ARCHS
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import build
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_smoke_mesh(1, 1)
+
+
+def test_dedupe_moe_spec(mesh):
+    rules = sh.logical_rules(mesh, layout="client_axis")
+    # (experts, embed, ff): experts takes "model"; ff must NOT reuse it
+    spec = sh.spec_to_pspec(mesh, ("experts", "embed", "ff"), (4, 8, 16), rules)
+    flat = [a for a in spec if a is not None]
+    assert len(flat) == len(set(map(str, flat)))
+
+
+def test_divisibility_gate(mesh):
+    rules = {"heads": "model", None: None}
+    # heads=3 not divisible by model axis (1 divides everything on smoke mesh)
+    spec = sh.spec_to_pspec(mesh, ("heads",), (3,), rules)
+    assert spec == P("model")  # size-1 axis divides
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    axes=st.lists(st.sampled_from(["embed", "ff", "heads", "kv", None]), min_size=1, max_size=4),
+)
+def test_spec_never_duplicates_axes(mesh, dims, axes):
+    n = min(len(dims), len(axes))
+    rules = sh.logical_rules(mesh, layout="client_axis")
+    spec = sh.spec_to_pspec(mesh, tuple(axes[:n]), tuple(dims[:n]), rules)
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in (entry,) if isinstance(entry, str) else entry:
+            used.append(ax)
+    assert len(used) == len(set(used))
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_param_specs_cover_params(name, mesh):
+    """Every param leaf has a spec leaf of matching rank."""
+    cfg = ARCHS[name].reduced()
+    model = build(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = model.specs()
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda t: isinstance(t, tuple))
+    assert len(flat_shapes) == len(flat_specs)
+    for sds, sp in zip(flat_shapes, flat_specs):
+        assert len(sp) == len(sds.shape), (sp, sds.shape)
+    # and they convert to NamedShardings without error in both layouts
+    for layout in ["client_axis", "fsdp"]:
+        sh.param_shardings(mesh, specs, shapes, layout=layout)
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_cache_specs_cover_caches(name, mesh):
+    cfg = ARCHS[name].reduced()
+    model = build(cfg)
+    shapes = model.cache_shapes(2, 32)["layers"]
+    specs = model.cache_specs()["layers"]
+    flat_shapes = jax.tree.leaves(
+        shapes, is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct)
+    )
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda t: isinstance(t, tuple))
+    assert len(flat_shapes) == len(flat_specs)
+    for sds, sp in zip(flat_shapes, flat_specs):
+        assert len(sp) == len(sds.shape), (name, sp, sds.shape)
+    sh.cache_shardings(mesh, shapes, specs)
+
+
+def test_cache_seq_axis_fallback():
+    """SSPerf H2 rules: seq-sharding engages only when the head dim cannot use
+    the model axis (GQA kv %% axis != 0, or MLA), via steps._cache_seq_axis."""
+    import dataclasses
+
+    from repro.launch.steps import _cache_seq_axis
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 4}
+        axis_names = ("data", "model")
+
+    mesh = FakeMesh()
+    yi = dataclasses.replace(ARCHS["yi-34b"], shard_cache_seq=True)       # kv=8 % 4 == 0 -> no need
+    assert _cache_seq_axis(yi, mesh) is None
+    mesh16 = type("M", (), {"shape": {"data": 16, "model": 16},
+                            "axis_names": ("data", "model")})()
+    yi16 = dataclasses.replace(ARCHS["yi-34b"], shard_cache_seq=True)     # kv=8 % 16 != 0 -> shard seq
+    assert _cache_seq_axis(yi16, mesh16) == "model"
+    ds = dataclasses.replace(ARCHS["deepseek-v2-lite-16b"], shard_cache_seq=True)  # MLA -> always
+    assert _cache_seq_axis(ds, mesh16) == "model"
+    off = ARCHS["yi-34b"]  # default: paper-faithful baseline, flag off
+    assert off.shard_cache_seq is False or _cache_seq_axis(off, mesh16) == "model"
+
+
+def test_cache_seq_sharding_spec(mesh):
+    """With seq_axis="model", the GQA cache seq dim takes the axis and the
+    kv dim must not reuse it; k_pos follows the seq dim."""
+    cfg = ARCHS["yi-34b"].reduced()
+    model = build(cfg)
+    shapes = model.cache_shapes(2, 32)["layers"]
+    specs = model.cache_specs()["layers"]
+    shardings = sh.cache_shardings(mesh, shapes, specs, seq_axis="model")
+    for ns in jax.tree.leaves(shardings):
+        used = []
+        for entry in ns.spec:
+            if entry is None:
+                continue
+            for ax in (entry,) if isinstance(entry, str) else entry:
+                used.append(ax)
+        assert len(used) == len(set(used))

@@ -1,0 +1,145 @@
+"""End-to-end behaviour tests: the paper's technique actually trains language
+models, the serve path generates, the dry-run machinery lowers on the forced
+512-device mesh (subprocess), and the optimizer substrate behaves."""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import ARCHS
+from repro.launch.train import run as train_run
+from repro.models import build
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_federated_lm_training_reduces_loss():
+    # eta=0.05 is in the stable region for the reduced olmo LM (eta>=0.2
+    # diverges: the prox step no longer contracts on the non-convex loss)
+    hist = train_run("olmo-1b", reduced=True, steps=12, algorithm="gpdmm",
+                     k=2, eta=0.05, m=2, per_client_batch=2, seq_len=64, log_every=4)
+    first, last = hist[0]["server_loss"], hist[-1]["server_loss"]
+    assert last < first - 0.3, (first, last)
+
+
+def test_agpdmm_trains_lm_too():
+    hist = train_run("olmo-1b", reduced=True, steps=8, algorithm="agpdmm",
+                     k=2, eta=0.05, m=2, per_client_batch=2, seq_len=64, log_every=4)
+    assert hist[-1]["server_loss"] < hist[0]["server_loss"]
+
+
+def test_serve_generates():
+    from repro.launch.serve import run as serve_run
+    gen = serve_run("olmo-1b", reduced=True, batch=2, prompt_len=16, new_tokens=4)
+    assert gen.shape == (2, 4)
+    v = ARCHS["olmo-1b"].reduced().vocab_size
+    assert bool((gen >= 0).all()) and bool((gen < v).all())
+
+
+def test_serve_ssm_generates():
+    from repro.launch.serve import run as serve_run
+    gen = serve_run("rwkv6-1.6b", reduced=True, batch=2, prompt_len=16, new_tokens=4)
+    assert gen.shape == (2, 4)
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo_subprocess():
+    """The dry-run driver (512 forced host devices) must succeed end-to-end;
+    run in a subprocess so the forced device count can't leak here."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "olmo-1b", "--shape", "decode_32k"],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=str(REPO),
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "ok=1" in out.stdout
+
+
+def test_checkpoint_resume_roundtrip(tmp_path):
+    hist = train_run("olmo-1b", reduced=True, steps=4, algorithm="gpdmm",
+                     k=1, eta=0.3, m=2, per_client_batch=2, seq_len=32,
+                     ckpt_dir=str(tmp_path), log_every=2)
+    from repro import checkpoint as ckpt
+    back = ckpt.load(tmp_path)
+    assert "server" in back and len(jax.tree.leaves(back["server"])) > 0
+
+
+def test_adam_optimizes_quadratic():
+    opt = optim.adam(0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_sgd_momentum_optimizes():
+    opt = optim.sgd(0.05, momentum=0.9)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    # heavy-ball on x^2 is underdamped at (0.05, 0.9): |x| decays ~0.9^t with
+    # oscillation; 100 steps land at 0.011 -- give it 160
+    for _ in range(160):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    s = optim.cosine(1.0, total_steps=100, warmup_steps=10)
+    assert float(s(0)) < 0.2
+    assert float(s(10)) == pytest.approx(1.0, rel=0.05)
+    assert float(s(100)) == pytest.approx(0.1, rel=0.05)
+
+
+def test_microbatched_grad_equals_full():
+    """Grad accumulation (the memory hillclimb lever) must be exact."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+
+    g_full = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+
+    mb = jax.tree.map(lambda x: x.reshape(2, 2, *x.shape[1:]), batch)
+
+    def acc(g, mb_i):
+        gi = jax.grad(lambda p: model.loss(p, mb_i)[0])(params)
+        return jax.tree.map(jnp.add, g, gi), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    g_acc, _ = jax.lax.scan(acc, g0, mb)
+    g_acc = jax.tree.map(lambda x, p: (x / 2).astype(p.dtype), g_acc, params)
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)
+
+
+def test_quantized_partial_lm_training():
+    """Beyond-paper features compose at LM scale: 8-bit EF21 uplink + 50%
+    client participation still reduce the federated LM loss."""
+    hist = train_run("olmo-1b", reduced=True, steps=10, algorithm="gpdmm",
+                     k=2, eta=0.05, m=4, per_client_batch=2, seq_len=64,
+                     log_every=3, uplink_bits=8, participation=0.5)
+    assert hist[-1]["server_loss"] < hist[0]["server_loss"]
+    assert hist[-1]["lam_sum_norm"] < 1e-2

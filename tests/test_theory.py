@@ -1,0 +1,111 @@
+"""Convergence-theory checks: Theorem 1 (linear rate via the Q^r Lyapunov
+functional) and Theorem 2 (sublinear trend for mu = 0)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FederatedConfig
+from repro.core import make, quadratic, theory
+from repro.core.api import resolved_rho
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return quadratic.generate(jax.random.key(3), m=6, n=80, d=16)
+
+
+def test_beta_bound_valid(prob):
+    eta = 0.5 / prob.L
+    rho = 1.0 / (5 * eta)
+    beta = theory.gpdmm_beta(prob.L, prob.mu, eta, rho)
+    assert 0.0 < beta < 1.0
+
+
+def test_q_functional_linear_decay(prob):
+    """Q^{r+1} <= beta Q^r along a real GPDMM trajectory (Theorem 1)."""
+    K = 5
+    eta = 0.5 / prob.L
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=eta, use_avg=True)
+    rho = resolved_rho(cfg)
+    theta = phi = 0.5
+    beta = theory.gpdmm_beta(prob.L, prob.mu, eta, rho, theta, phi)
+
+    opt = make(cfg)
+    x0 = jnp.zeros((prob.d,))
+    s = opt.init(x0, prob.m)
+    lam_star = prob.lam_star()
+
+    qs = []
+    x_c_prev = s["x_c"]
+    for r in range(25):
+        s, metrics = opt.round(s, prob.grad, prob.batch(), return_trace=True)
+        tr = metrics["trace"]
+        q = theory.q_functional(
+            cfg,
+            x_c_prev=x_c_prev,
+            x_bar=tr["x_bar"],
+            lam_is=tr["lam_is"],
+            x_star=prob.x_star,
+            lam_star=lam_star,
+            L=prob.L,
+            mu=prob.mu,
+            theta=theta,
+            phi=phi,
+        )
+        qs.append(float(q))
+        x_c_prev = tr["x_K"]
+
+    qs = np.asarray(qs)
+    ratios = qs[1:] / np.maximum(qs[:-1], 1e-30)
+    # Theorem 1: every ratio <= beta (tiny numerical slack)
+    assert np.all(ratios <= beta + 1e-3), (ratios.max(), beta)
+    # and Q decays by orders of magnitude overall
+    assert qs[-1] < qs[0] * beta ** (len(qs) - 1) * 10
+
+
+def test_kkt_residuals_vanish(prob):
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=5, eta=0.5 / prob.L)
+    opt = make(cfg)
+    s = opt.init(jnp.zeros((prob.d,)), prob.m)
+    rf = jax.jit(lambda s: opt.round(s, prob.grad, prob.batch())[0])
+    for _ in range(300):
+        s = rf(s)
+    res = theory.kkt_residuals(prob, s["x_s"], s["lam_s"])
+    assert float(res["dual_sum"]) < 1e-3
+    assert float(res["primal_gap"]) < 1e-2
+    assert float(res["grad_match"]) < 1e-1
+
+
+def test_sublinear_general_convex():
+    """mu = 0 (rank-deficient clients): the running-average optimality gap
+    trends like O(1/R) -- gap(2R) <~ 0.7 * gap(R)."""
+    key = jax.random.key(7)
+    m, n, d = 4, 10, 24  # n < d: each client is rank-deficient => mu = 0
+    A = jax.random.normal(key, (m, n, d))
+    y0 = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    b = jnp.einsum("mnd,d->mn", A, y0)
+    AtA = jnp.einsum("mnd,mne->mde", A, A)
+    Atb = jnp.einsum("mnd,mn->md", A, b)
+    H, g = AtA.sum(0), Atb.sum(0)
+    # minimum-norm solution for the singular system
+    x_star = jnp.linalg.pinv(H) @ g
+    f_star = 0.5 * x_star @ H @ x_star - g @ x_star + 0.5 * jnp.einsum("mn,mn->", b, b)
+    L = float(jnp.linalg.eigvalsh(AtA).max())
+
+    def gap(x):
+        return float(0.5 * x @ H @ x - g @ x + 0.5 * jnp.einsum("mn,mn->", b, b) - f_star)
+
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=3, eta=0.5 / L)
+    opt = make(cfg)
+    s = opt.init(jnp.zeros((d,)), m)
+    batch = {"AtA": AtA, "Atb": Atb}
+    grad = lambda x, cb: cb["AtA"] @ x - cb["Atb"]  # noqa: E731
+    gaps = {}
+    rf = jax.jit(lambda s: opt.round(s, grad, batch)[0])
+    for r in range(1, 241):
+        s = rf(s)
+        if r in (60, 120, 240):
+            gaps[r] = gap(opt.server_params(s))
+    assert gaps[120] < 0.75 * gaps[60] + 1e-12, gaps
+    assert gaps[240] < 0.75 * gaps[120] + 1e-12, gaps
