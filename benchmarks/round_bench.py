@@ -1,0 +1,169 @@
+"""Whole-round benchmark: per-leaf pytree path vs flat-arena + fused
+round-tail path (ISSUE 1 tentpole acceptance).
+
+The federated round is memory-bound elementwise math over the stacked
+``(m, params)`` client state, so the figure of merit is full-state HBM
+passes (one pass = reading or writing every element of one (m, N) state
+tensor once).  The analytic counts below follow the op chains in
+``core/gpdmm.py`` literally: per-leaf tree.map chains each re-read their
+operands; a fused kernel is counted as its actual reads+writes; the
+arena-resident state never repacks per round (only the server-sized x_s
+row, 1/m of the state, excluded as O(1/m)).
+
+Three problem shapes:
+  * ``small``   -- the paper's least-squares scale (one tiny leaf).
+  * ``lm_flat`` -- LM-scale flat parameter buffer (one (2^20,) leaf, m x N
+                   = 8M f32).  The arena layout is exactly this flat view,
+                   so the gradient boundary costs nothing.
+  * ``lm_tree`` -- the same 1M params as a multi-leaf transformer-ish tree.
+                   Here each inner step pays an unpack(x)/pack(g) round
+                   trip at the pytree gradient oracle boundary (+4 passes
+                   per step), reported honestly: the arena still wins the
+                   round TAIL, the inner-loop boundary is the price of
+                   per-leaf grads (on TPU the slices/concat fuse into the
+                   grad computation; XLA:CPU materialises them).
+
+Gradient math itself is identical on both paths (a trivial linear grad
+keeps the round tail visible).  Emits a ``BENCH_round.json`` trajectory
+(one record per problem x algorithm x variant x path) plus the CSV lines
+the other benches use.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.base import FederatedConfig
+from repro.core import make
+
+PROBLEMS = {
+    "small": {"m": 8, "shapes": {"w": (24,)}},
+    "lm_flat": {"m": 8, "shapes": {"w": (1 << 20,)}},
+    "lm_tree": {
+        "m": 8,
+        "shapes": {
+            "embed": (512, 384),
+            "blk0_w1": (768, 512),
+            "blk0_w2": (512, 768),
+            "blk1_w1": (768, 512),
+            "blk1_w2": (512, 768),
+            "bias": (768,),
+        },
+    },
+}
+
+VARIANTS = {
+    "plain": {},
+    "ef21": {"uplink_bits": 8},
+    "partial": {"participation": 0.5},
+}
+
+
+def _params(shapes):
+    k = jax.random.key(0)
+    return {
+        name: jax.random.normal(jax.random.fold_in(k, i), shape)
+        for i, (name, shape) in enumerate(sorted(shapes.items()))
+    }
+
+
+def _grad_fn(p, _b):
+    # grad of 0.15||x||^2: memory-bound, so the round tail stays visible
+    return jax.tree.map(lambda x: 0.3 * x, p)
+
+
+def round_passes(algo: str, variant: str, K: int, *, arena: bool, multi_leaf: bool) -> int:
+    """Full-(m, N) elementwise HBM passes per round (reads + writes), grad
+    math excluded (identical on both paths).  One fused_update = 4r + 1w."""
+    if not arena:
+        n = 1  # x_s broadcast to (m, N), materialised once per round
+        n += 5 * K  # per-leaf fused updates
+        n += 4 + 3  # lam_is (3r+1w) + uplink (2r+1w)
+        if variant == "ef21":
+            n += 3 + 3 + 3  # tree_sub + _qdq (reduce 1r, apply 1r+1w) + tree_add
+        if variant == "partial":
+            n += 3  # tree_select uplink
+            if algo == "gpdmm":
+                n += 3  # x_c carry select
+        n += 1 + 3  # client mean (1r) + lam_s_new (2r+1w)
+        return n
+    n = 5 * K  # arena-wide fused updates; server row broadcasts in-kernel
+    if multi_leaf:
+        # pytree gradient-oracle boundary: unpack x (1r+1w) + pack g (1r+1w)
+        # per inner step; zero for flat/single-leaf params (pure reshape)
+        n += 4 * K
+    n += 4  # fused round_tail, uplink-only (lam_is skipped off-trace): 3r + 1w
+    if variant == "ef21":
+        n += 2 + 4  # rowmax reduce (2r) + fused qdq apply (3r+1w)
+    if variant == "partial":
+        n += 3
+        if algo == "gpdmm":
+            n += 3
+    n += 1 + 3  # client mean + fused dual_from_uplink (2r+1w)
+    return n
+
+
+def bench_round(problem: str, algo: str, variant: str, K: int = 4):
+    spec = PROBLEMS[problem]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    multi_leaf = len(spec["shapes"]) > 1
+    n = sum(int(jnp.size(v)) for v in params.values())
+    batch = {"dummy": jnp.zeros((m, 1))}
+    records = []
+    for arena in [False, True]:
+        cfg = FederatedConfig(algorithm=algo, inner_steps=K, eta=0.1,
+                              use_arena=arena, **VARIANTS[variant])
+        opt = make(cfg)
+        state = opt.init(params, m)
+
+        fn = jax.jit(lambda s: opt.round(s, _grad_fn, batch)[0])
+        us = time_fn(fn, state)
+        passes = round_passes(algo, variant, K, arena=arena, multi_leaf=multi_leaf)
+        state_bytes = m * n * 4
+        eff_gbps = passes * state_bytes / (us * 1e-6) / 1e9
+        path = "arena" if arena else "pytree"
+        records.append({
+            "problem": problem, "algo": algo, "variant": variant, "path": path,
+            "m": m, "n_params": n, "K": K,
+            "us_per_round": round(us, 1),
+            "hbm_passes": passes,
+            "state_bytes": state_bytes,
+            "effective_GBps": round(eff_gbps, 2),
+        })
+        emit(f"round_{problem}_{algo}_{variant}_{path}", us,
+             f"passes={passes},effective_GBps={eff_gbps:.2f}")
+    pyt, arn = records
+    dp = (pyt["hbm_passes"] - arn["hbm_passes"]) / pyt["hbm_passes"]
+    print(f"  -> {problem}/{algo}/{variant}: passes {pyt['hbm_passes']} -> "
+          f"{arn['hbm_passes']} ({dp:+.0%}), time {pyt['us_per_round']:.0f} -> "
+          f"{arn['us_per_round']:.0f} us")
+    return records
+
+
+def run(out_path: str = "BENCH_round.json"):
+    trajectory = []
+    for problem in PROBLEMS:
+        for algo in ["gpdmm", "agpdmm"]:
+            for variant in VARIANTS:
+                trajectory.extend(bench_round(problem, algo, variant))
+    payload = {
+        "bench": "round_bench",
+        "note": "hbm_passes are analytic full-(m,N) elementwise passes per "
+                "round (grad math excluded, identical on both paths); "
+                "effective_GBps = passes * state_bytes / wall_time.  The "
+                "lm_tree rows include the pytree gradient-oracle boundary "
+                "(+4 passes/step) the arena pays for multi-leaf trees.",
+        "trajectory": trajectory,
+    }
+    pathlib.Path(out_path).write_text(json.dumps(payload, indent=2))
+    print(f"[round_bench] wrote {len(trajectory)} records to {out_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,7 @@ import numpy as np
 from benchmarks.common import emit, time_fn
 from repro.configs.base import FederatedConfig
 from repro.core import make, quadratic, theory
+from repro.core import tree_util as T
 from repro.core.api import resolved_rho
 
 
@@ -23,7 +24,8 @@ def run():
 
     lam_star = prob.lam_star()
     qs = []
-    x_c_prev = s["x_c"]
+    # x_i^{0,K} = x0; the state's client half is arena-resident by default
+    x_c_prev = T.tree_broadcast(jnp.zeros((prob.d,)), prob.m)
     t_round = None
     for r in range(40):
         s, metrics = opt.round(s, prob.grad, prob.batch(), return_trace=True)

@@ -85,6 +85,16 @@ class FederatedConfig:
     # x_s) for ALL i from what it holds -- so the KKT invariant (25) survives
     # partial rounds exactly.  1.0 = every client every round (paper-faithful).
     participation: float = 1.0
+    # Run the round's elementwise hot path over the flat client-state arena
+    # (core.arena): all leaves of a client packed into one contiguous
+    # 128-lane-padded row, so the K inner steps and the round tail are a
+    # handful of fused whole-buffer kernels instead of per-leaf tree.map
+    # chains.  Numerically equivalent (same f32 math, checked in
+    # tests/test_arena.py); automatically falls back to the pytree path for
+    # layout="fsdp" (per-leaf parameter shardings must be preserved) and for
+    # mixed-dtype trees (one buffer would promote all client state to the
+    # widest leaf dtype).
+    use_arena: bool = True
     # beyond-paper: SVRG-style variance reduction for the stochastic setting
     # the paper names as future work (SSVII), following [14]'s PDMM+SVRG for
     # P2P.  "svrg" corrects each per-step minibatch gradient with the

@@ -24,12 +24,46 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
+from repro.core import arena
 from repro.core import tree_util as T
 from repro.core.api import FedOpt, resolved_rho
-from repro.core.gpdmm import inner_steps
+from repro.core.gpdmm import (
+    _use_arena, arena_metrics, arena_tail, inner_steps, inner_steps_arena,
+)
+from repro.kernels import ops
+
+
+def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    """AGPDMM round over the flat arena (see gpdmm._round_arena): lam_s and
+    u_hat are arena-resident (m, width) buffers; the client init is the
+    fresher server row, so no primal carry is stored at all."""
+    rho = resolved_rho(cfg)
+    K = cfg.inner_steps
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    lam = state["lam_s"]
+    m = lam.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+    x0 = jnp.broadcast_to(x_s_row[None], (m, spec.width))
+
+    x_K, _ = inner_steps_arena(
+        spec, grad_fn, x0, x_s_row, lam, batch, K=K, eta=cfg.eta, rho=rho,
+        per_step=per_step_batches,
+        vr_snapshot=x0 if cfg.variance_reduction == "svrg" else None,
+    )
+
+    _, uplink = ops.round_tail(x_K, lam, x_s_row, rho, with_lam_is=False)
+    new_state, x_s_new, lam_s_new, _ = arena_tail(cfg, spec, state, uplink, m)
+    new_state |= {
+        "x_s": spec.unpack(x_s_new),
+        "lam_s": lam_s_new,
+        "round": state["round"] + 1,
+    }
+    return new_state, arena_metrics(lam_s_new, x_K, x_s_row)
 
 
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
+    if _use_arena(cfg, state["x_s"]):
+        return _round_arena(cfg, state, grad_fn, batch, per_step_batches)
     rho = resolved_rho(cfg)
     K = cfg.inner_steps
     x_s, lam_s = state["x_s"], state["lam_s"]
@@ -69,6 +103,17 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
 
 def make(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
+        if _use_arena(cfg, params):
+            spec = arena.ArenaSpec.from_tree(params)
+            st = {
+                "x_s": params,
+                "lam_s": arena.zeros(spec, m),
+                "round": jnp.zeros((), jnp.int32),
+            }
+            if cfg.uplink_bits is not None or cfg.participation < 1.0:
+                row = spec.pack(params)
+                st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
+            return st
         st = {
             "x_s": params,
             "lam_s": T.tree_zeros_like(T.tree_broadcast(params, m)),

@@ -1,0 +1,163 @@
+"""Flat client-state arena: one contiguous ``(m, width)`` buffer per stacked
+client pytree.
+
+The GPDMM/AGPDMM round is memory-bound elementwise math over the stacked
+``(m, params)`` client state; running it as per-leaf ``tree.map`` chains costs
+one kernel launch *per leaf per op* and re-reads every leaf from HBM each
+time.  The arena packs all leaves of one client into a single row so that
+
+  * every round-tail op is ONE fused pass over ONE buffer;
+  * Pallas kernels tile the row as ``(width // 128, 128)`` without ever
+    straddling a leaf boundary (each leaf is padded to a multiple of the
+    128-lane TPU register width, so leaf edges always fall on row edges of
+    the tiled view);
+  * the server aggregation stays a single ``mean(axis=0)`` -- one all-reduce
+    when dim 0 is sharded over the client mesh axis.
+
+Layout (per client row, ``LANES = 128``)::
+
+    [ leaf0 ......  | 0-pad ][ leaf1 | 0-pad ] ... [ leafL | 0-pad ]
+      size0           to 128x  size1   to 128x
+
+Padding is ZERO-FILLED and every arena op used by the round maps 0 -> 0
+(linear updates, quantise-dequantise, masked selects, client means), so the
+padding stays identically zero across rounds -- norms and sums over arena
+buffers need no masking.  ``docs/arena.md`` documents the layout and the
+donation contract.
+
+The spec is pure static metadata (shapes/dtypes only), so ``from_tree`` can
+be called on tracers inside a jitted round at zero runtime cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the canonical TPU lane width the kernels tile against; every leaf slice
+# is padded to a multiple of it
+from repro.kernels.fused_update import LANES, ceil_to as _ceil_to
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlice:
+    """Static slice-table entry for one pytree leaf inside the arena row."""
+
+    path: str  # human-readable key path (debug / docs)
+    shape: Tuple[int, ...]  # per-client leaf shape (no client dim)
+    dtype: Any  # original leaf dtype (restored by unpack)
+    offset: int  # start column in the arena row; multiple of LANES
+    size: int  # prod(shape)
+    padded: int  # size rounded up to a multiple of LANES
+
+    @property
+    def rows(self) -> int:
+        """Rows this leaf occupies in the ``(width // LANES, LANES)`` view."""
+        return self.padded // LANES
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaSpec:
+    """Static pack/unpack metadata for one parameter pytree.
+
+    Built from the *per-client* (unstacked) tree structure; the stacked
+    ``(m, ...)`` variants reuse the same slice table with a leading row dim.
+    """
+
+    treedef: Any  # jax PyTreeDef
+    leaves: Tuple[LeafSlice, ...]
+    width: int  # row length; multiple of LANES
+    dtype: Any  # common arena dtype (result_type of all leaves)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_tree(cls, tree, *, stacked: bool = False) -> "ArenaSpec":
+        """Spec for ``tree``; with ``stacked=True`` leaves carry a leading
+        client dim that is excluded from the slice table."""
+        paths_leaves = jax.tree_util.tree_leaves_with_path(tree)
+        treedef = jax.tree.structure(tree)
+        entries = []
+        off = 0
+        for path, leaf in paths_leaves:
+            shape = tuple(leaf.shape[1:] if stacked else leaf.shape)
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            padded = _ceil_to(size, LANES)
+            entries.append(
+                LeafSlice(
+                    path=jax.tree_util.keystr(path),
+                    shape=shape,
+                    dtype=leaf.dtype,
+                    offset=off,
+                    size=size,
+                    padded=padded,
+                )
+            )
+            off += padded
+        dtype = jnp.result_type(*(e.dtype for e in entries))
+        return cls(treedef=treedef, leaves=tuple(entries), width=off, dtype=dtype)
+
+    # -- derived static tables ---------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.width // LANES
+
+    def leaf_rows(self) -> Tuple[int, ...]:
+        """Per-leaf row counts of the ``(n_rows, LANES)`` tiled view -- the
+        static segment table the fused EF21 reduction uses."""
+        return tuple(e.rows for e in self.leaves)
+
+    # -- pack / unpack ------------------------------------------------------
+    def _pack_leaves(self, leaves, lead: Tuple[int, ...]):
+        parts = []
+        for e, leaf in zip(self.leaves, leaves):
+            flat = jnp.reshape(leaf, lead + (e.size,)).astype(self.dtype)
+            if e.padded != e.size:
+                pad = [(0, 0)] * len(lead) + [(0, e.padded - e.size)]
+                flat = jnp.pad(flat, pad)
+            parts.append(flat)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+    def pack(self, tree):
+        """Server pytree -> ``(width,)`` arena row (zero-filled padding)."""
+        return self._pack_leaves(jax.tree.leaves(tree), ())
+
+    def pack_stacked(self, tree):
+        """Stacked ``(m, ...)`` pytree -> ``(m, width)`` arena buffer."""
+        leaves = jax.tree.leaves(tree)
+        m = leaves[0].shape[0]
+        return self._pack_leaves(leaves, (m,))
+
+    def _unpack_row(self, arr, lead: Tuple[int, ...]):
+        leaves = []
+        for e in self.leaves:
+            flat = jax.lax.slice_in_dim(arr, e.offset, e.offset + e.size, axis=len(lead))
+            leaves.append(jnp.reshape(flat, lead + e.shape).astype(e.dtype))
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def unpack(self, row):
+        """``(width,)`` arena row -> server pytree (original dtypes)."""
+        assert row.shape == (self.width,), (row.shape, self.width)
+        return self._unpack_row(row, ())
+
+    def unpack_stacked(self, arr):
+        """``(m, width)`` arena buffer -> stacked ``(m, ...)`` pytree."""
+        assert arr.ndim == 2 and arr.shape[1] == self.width, (arr.shape, self.width)
+        return self._unpack_row(arr, (arr.shape[0],))
+
+    # -- views --------------------------------------------------------------
+    def leaf_view(self, arr, index: int):
+        """Reshaped view of one leaf inside an arena buffer (no copy under
+        jit; stacked or unstacked inferred from rank)."""
+        e = self.leaves[index]
+        lead = () if arr.ndim == 1 else (arr.shape[0],)
+        flat = jax.lax.slice_in_dim(arr, e.offset, e.offset + e.size, axis=len(lead))
+        return jnp.reshape(flat, lead + e.shape)
+
+
+def zeros(spec: ArenaSpec, m: int | None = None):
+    """Fresh zero arena: ``(width,)`` or ``(m, width)``."""
+    shape = (spec.width,) if m is None else (m, spec.width)
+    return jnp.zeros(shape, spec.dtype)

@@ -25,8 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
+from repro.core import arena
 from repro.core import tree_util as T
 from repro.core.api import FedOpt, resolved_rho
+from repro.core.gpdmm import _use_arena
 from repro.kernels import ops
 
 
@@ -72,7 +74,51 @@ def make_exact(cfg: FederatedConfig) -> FedOpt:
 # inexact (K gradient steps, paper eq. (18))
 # ---------------------------------------------------------------------------
 
+def _round_inexact_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    """Inexact FedSplit over the flat arena: the K gradient steps and the
+    reflect/average/reflect tail run on one (m, width) buffer per state
+    tensor instead of per-leaf tree.map chains."""
+    gamma = _gamma(cfg)
+    K, eta = cfg.inner_steps, cfg.eta
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    z = state["z_s"]  # arena-resident (m, width)
+    m = z.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+    vgrad = jax.vmap(grad_fn)
+
+    if cfg.fedsplit_init == "z":
+        x0 = z  # the paper's diagnosed improper init
+    elif cfg.fedsplit_init == "xs":
+        x0 = jnp.broadcast_to(x_s_row[None], z.shape)
+    else:
+        raise ValueError(cfg.fedsplit_init)
+
+    def one_step(x, xs_k):
+        b = xs_k if per_step_batches else batch
+        g = spec.pack_stacked(vgrad(spec.unpack_stacked(x), b))
+        # grad h = grad f + (x - z)/gamma: lam-free fused step, rho = 1/gamma
+        return ops.fused_update(x, g, z, None, eta, 1.0 / gamma), None
+
+    if per_step_batches:
+        x_K, _ = jax.lax.scan(one_step, x0, batch)
+    else:
+        x_K, _ = jax.lax.scan(one_step, x0, None, length=K)
+
+    z_is = 2.0 * x_K - z
+    x_s_new = jnp.mean(z_is, axis=0)
+    z_s_new = 2.0 * x_s_new[None] - z_is
+    new_state = {
+        "x_s": spec.unpack(x_s_new),
+        "z_s": z_s_new,
+        "round": state["round"] + 1,
+    }
+    drift = jnp.sum(jnp.square((x_K - x_s_row[None]).astype(jnp.float32)), axis=1)
+    return new_state, {"client_drift": jnp.mean(drift)}
+
+
 def _round_inexact(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
+    if _use_arena(cfg, state["x_s"]):
+        return _round_inexact_arena(cfg, state, grad_fn, batch, per_step_batches)
     gamma = _gamma(cfg)
     K, eta = cfg.inner_steps, cfg.eta
     z_s, x_s = state["z_s"], state["x_s"]
@@ -89,11 +135,10 @@ def _round_inexact(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches
     def one_step(x, xs_k):
         b = xs_k if per_step_batches else batch
         g = vgrad(x, b)
-        # grad h = grad f + (x - z)/gamma: fused step with rho = 1/gamma, lam=0
-        zeros = T.tree_zeros_like(g)
+        # grad h = grad f + (x - z)/gamma: lam-free fused step, rho = 1/gamma
         x_new = T.tmap(
-            lambda xx, gg, zz, ll: ops.fused_update(xx, gg, zz, ll, eta, 1.0 / gamma),
-            x, g, z_s, zeros,
+            lambda xx, gg, zz: ops.fused_update(xx, gg, zz, None, eta, 1.0 / gamma),
+            x, g, z_s,
         )
         return x_new, None
 
@@ -112,6 +157,14 @@ def _round_inexact(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches
 
 def make_inexact(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
+        if _use_arena(cfg, params):
+            spec = arena.ArenaSpec.from_tree(params)
+            row = spec.pack(params)
+            return {
+                "x_s": params,
+                "z_s": jnp.broadcast_to(row[None], (m, spec.width)),
+                "round": jnp.zeros((), jnp.int32),
+            }
         return {
             "x_s": params,
             "z_s": T.tree_broadcast(params, m),

@@ -29,9 +29,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
+from repro.core import arena
 from repro.core import tree_util as T
 from repro.core.api import FedOpt, resolved_rho
 from repro.kernels import ops
+
+
+def _use_arena(cfg: FederatedConfig, params=None) -> bool:
+    # fsdp shards parameters per-leaf; packing would force a re-gather, so
+    # that layout keeps the per-leaf pytree path.  Mixed-dtype trees (bf16
+    # weights + f32 norms) also fall back: the single arena buffer would
+    # promote everything to the widest dtype -- 2x the client-state HBM and
+    # a numerical divergence from the per-leaf path.
+    if not cfg.use_arena or cfg.layout == "fsdp":
+        return False
+    if params is not None:
+        if len({leaf.dtype for leaf in jax.tree.leaves(params)}) > 1:
+            return False
+    return True
 
 
 def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
@@ -82,7 +97,129 @@ def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
     return x_K, T.tree_scale(xsum, 1.0 / K)
 
 
+def inner_steps_arena(spec, grad_fn, x0, x_s_row, lam, batch, *, K, eta, rho,
+                      per_step, vr_snapshot=None):
+    """Arena counterpart of ``inner_steps``: client state carried as one
+    ``(m, width)`` buffer; each step is ONE fused-update kernel over the
+    packed buffer (the server row broadcasts in-kernel) plus the unavoidable
+    unpack->grad->pack round trip through the model's pytree."""
+    step_c = 1.0 / (1.0 / eta + rho)
+    vgrad = jax.vmap(grad_fn)
+
+    def grad_a(xa, b):
+        return spec.pack_stacked(vgrad(spec.unpack_stacked(xa), b))
+
+    gbar = None
+    if vr_snapshot is not None:
+        assert per_step, "SVRG needs per-step minibatches (K, m, ...)"
+        snap_grads = jax.lax.map(lambda b: grad_a(vr_snapshot, b), batch)
+        gbar = jnp.mean(snap_grads, axis=0)
+
+    def one_step(carry, xs_k):
+        x, xsum = carry
+        b = xs_k if per_step else batch
+        g = grad_a(x, b)
+        if gbar is not None:
+            g = g - grad_a(vr_snapshot, b) + gbar
+        x_new = ops.fused_update_arena(x, g, x_s_row, lam, step_c, rho)
+        return (x_new, xsum + x_new), None
+
+    init = (x0, jnp.zeros_like(x0))
+    if per_step:
+        (x_K, xsum), _ = jax.lax.scan(one_step, init, batch)
+    else:
+        (x_K, xsum), _ = jax.lax.scan(one_step, init, None, length=K)
+    return x_K, xsum * (1.0 / K)
+
+
+def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
+    """Shared GPDMM/AGPDMM arena round tail: fused EF21 quantise-delta,
+    participation select, u_hat carry, the single client-mean all-reduce,
+    and the fused dual refresh.  Returns (state_updates, x_s_new_row,
+    lam_s_new, mask)."""
+    rho = resolved_rho(cfg)
+    new_state = {}
+    mask = None
+    u_hat = state.get("u_hat")  # arena-resident (m, width) or absent
+    if cfg.uplink_bits is not None:  # fused EF21: 2 passes instead of ~4
+        uplink = ops.ef21_update(uplink, u_hat, cfg.uplink_bits, spec.leaf_rows())
+    if cfg.participation < 1.0:
+        mask = T.participation_mask(
+            jax.random.fold_in(jax.random.key(17), state["round"]), m, cfg.participation
+        )
+        uplink = jnp.where(mask[:, None], uplink, u_hat)
+    if u_hat is not None:
+        new_state["u_hat"] = uplink
+    x_s_new = jnp.mean(uplink, axis=0)  # <- the round's single all-reduce
+    # fused tail pass 2: lam' = rho (u - x_s'), server row broadcast in-kernel
+    lam_s_new = ops.dual_from_uplink(uplink, x_s_new, rho)
+    return new_state, x_s_new, lam_s_new, mask
+
+
+def arena_metrics(lam_s_new, x_K, x_s_row):
+    """KKT-invariant and drift metrics straight off the arena buffers;
+    padding columns are identically zero, so no masking is needed."""
+    f32 = jnp.float32
+    return {
+        "lam_sum_norm": jnp.linalg.norm(jnp.sum(lam_s_new.astype(f32), axis=0)),
+        "client_drift": jnp.mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)
+        ),
+    }
+
+
+def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, return_trace):
+    """GPDMM round over the flat arena: the tail is 3 fused kernels + the
+    single client-mean all-reduce instead of ~6 per-leaf pytree passes.
+
+    The stacked hot state (lam_s, x_c, u_hat) is arena-RESIDENT: it enters
+    and leaves the round as ``(m, width)`` buffers (donated in place by the
+    launchers), so the only per-round layout work is packing the
+    server-sized x_s row -- 1/m of the state."""
+    rho = resolved_rho(cfg)
+    K = cfg.inner_steps
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    lam = state["lam_s"]
+    x_c = state["x_c"]
+    m = lam.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+
+    snapshot = None
+    if cfg.variance_reduction == "svrg":
+        snapshot = jnp.broadcast_to(x_s_row[None], x_c.shape)
+    x_K, x_bar = inner_steps_arena(
+        spec, grad_fn, x_c, x_s_row, lam, batch, K=K, eta=cfg.eta, rho=rho,
+        per_step=per_step_batches, vr_snapshot=snapshot,
+    )
+    x_ref = x_bar if cfg.use_avg else x_K
+
+    # fused tail pass 1: the uplink (and lam_is only when a trace wants it --
+    # 3 reads + 1 write on the training path, +1 write with the trace)
+    lam_is, uplink = ops.round_tail(x_ref, lam, x_s_row, rho, with_lam_is=return_trace)
+    new_state, x_s_new, lam_s_new, mask = arena_tail(cfg, spec, state, uplink, m)
+
+    # silent clients did not really run their inner steps: keep their carry
+    x_c_new = x_K if mask is None else jnp.where(mask[:, None], x_K, x_c)
+    new_state |= {
+        "x_s": spec.unpack(x_s_new),  # server-sized; clients stay packed
+        "lam_s": lam_s_new,
+        "x_c": x_c_new,
+        "round": state["round"] + 1,
+    }
+    metrics = arena_metrics(lam_s_new, x_K, x_s_row)
+    if return_trace:
+        metrics["trace"] = {
+            "x_ref": spec.unpack_stacked(x_ref),
+            "x_bar": spec.unpack_stacked(x_bar),
+            "lam_is": spec.unpack_stacked(lam_is),
+            "x_K": spec.unpack_stacked(x_K),
+        }
+    return new_state, metrics
+
+
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, return_trace=False):
+    if _use_arena(cfg, state["x_s"]):
+        return _round_arena(cfg, state, grad_fn, batch, per_step_batches, return_trace)
     rho = resolved_rho(cfg)
     K = cfg.inner_steps
     x_s, lam_s, x_c = state["x_s"], state["lam_s"], state["x_c"]
@@ -133,6 +270,21 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
 
 def make(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
+        if _use_arena(cfg, params):
+            # arena-resident client state: one (m, width) buffer per stacked
+            # tensor, donated in place round over round; x_s stays a pytree
+            # (the public server-params contract)
+            spec = arena.ArenaSpec.from_tree(params)
+            row = spec.pack(params)
+            st = {
+                "x_s": params,
+                "lam_s": arena.zeros(spec, m),
+                "x_c": jnp.broadcast_to(row[None], (m, spec.width)),
+                "round": jnp.zeros((), jnp.int32),
+            }
+            if cfg.uplink_bits is not None or cfg.participation < 1.0:
+                st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
+            return st
         st = {
             "x_s": params,
             "lam_s": T.tree_zeros_like(T.tree_broadcast(params, m)),
@@ -141,8 +293,10 @@ def make(cfg: FederatedConfig) -> FedOpt:
         }
         if cfg.uplink_bits is not None or cfg.participation < 1.0:
             # server's running view of each client's uplink (EF21 integrator /
-            # async-PDMM cache); init == round-0 uplink x_c - 0/rho
-            st["u_hat"] = st["x_c"]
+            # async-PDMM cache); init == round-0 uplink x_c - 0/rho.  A fresh
+            # broadcast, NOT an alias of x_c: donated round states must not
+            # contain the same buffer twice.
+            st["u_hat"] = T.tree_broadcast(params, m)
         return st
 
     return FedOpt(

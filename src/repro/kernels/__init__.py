@@ -8,6 +8,11 @@ Layout (per the repo convention):
 Kernels:
   * ``fused_update``    -- the paper's GPDMM/AGPDMM client inner step (eq. 20),
                            a memory-bound 4-read/1-write elementwise fusion.
+  * ``round_tail``      -- fused GPDMM/AGPDMM round tail over the flat
+                           client-state arena (core.arena): lam_is + uplink
+                           one-pass, 2-pass EF21 quantise-delta, dual refresh,
+                           and the arena-wide eq.-(20) step with in-kernel
+                           server-row broadcast (see docs/arena.md).
   * ``wkv6``            -- RWKV-6 chunked recurrence (data-dependent decay).
   * ``flash_attention`` -- causal / sliding-window GQA attention.
 """

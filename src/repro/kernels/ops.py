@@ -247,11 +247,14 @@ def wkv6_step(r1, k1, v1, w1, u, s):
 # fused federated client update
 # ---------------------------------------------------------------------------
 
-def fused_update(x, g, xs, lam, step, rho, *, impl: Optional[str] = None, block: int = 4096):
+def fused_update(x, g, xs, lam, step, rho, *, impl: Optional[str] = None,
+                 block: Optional[int] = None):
     """Fused federated inner step (paper eq. (20)); see ``ref.fused_update_ref``.
 
     The Pallas kernel fuses 4 HBM reads + 1 write into one pass -- the client
     inner loop is memory-bound, so unfused XLA would read/write 6 arrays.
+    ``block=None`` resolves to the single module-wide default
+    (``fused_update.BLOCK_ROWS``), checked against the VMEM budget.
     """
     impl = _resolve(impl)
     if impl == "xla":
@@ -259,8 +262,116 @@ def fused_update(x, g, xs, lam, step, rho, *, impl: Optional[str] = None, block:
     from repro.kernels import fused_update as fu
 
     return fu.fused_update_pallas(
-        x, g, xs, lam, step, rho, block=block, interpret=(impl == "pallas_interpret")
+        x, g, xs, lam, step, rho, block=block or fu.BLOCK_ROWS,
+        interpret=(impl == "pallas_interpret"),
     )
+
+
+# ---------------------------------------------------------------------------
+# fused round tail over the flat client-state arena (core.arena layout:
+# (m, width) client buffers, (width,) server rows, width % 128 == 0)
+# ---------------------------------------------------------------------------
+
+def fused_update_arena(x, g, x_s, lam, step, rho, *, impl: Optional[str] = None,
+                       block: Optional[int] = None):
+    """Eq. (20) inner step over the whole packed arena: x, g, lam (m, width);
+    x_s (width,) server row broadcast in-kernel (never materialised in HBM).
+    ONE kernel launch per inner step instead of one per pytree leaf."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _ref.fused_update_ref(x, g, x_s[None] if x_s.ndim == 1 else x_s, lam, step, rho)
+    from repro.kernels import round_tail as rt
+
+    return rt.fused_update_arena_pallas(
+        x, g, x_s, lam, step, rho, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+def round_tail(x_ref, lam_s, x_s, rho, *, with_lam_is: bool = True,
+               impl: Optional[str] = None, block: Optional[int] = None):
+    """Fused dual flip + uplink (eqs. 23/24 + Alg. 1 line 8):
+
+        lam_is = rho (x_s - x_ref) - lam_s
+        uplink = x_ref - lam_is / rho
+
+    3 HBM reads + 2 writes in one pass instead of ~4 separate passes.
+    x_ref, lam_s: (m, width); x_s: (width,).  Returns (lam_is, uplink);
+    ``with_lam_is=False`` (the non-trace training path -- callers discard
+    lam_is) skips the lam_is output: 3 reads + 1 write, returns (None, u)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        xr = x_ref.astype(jnp.float32)
+        lam = lam_s.astype(jnp.float32)
+        xs = x_s.astype(jnp.float32)[None]
+        lam_is = rho * (xs - xr) - lam
+        uplink = (xr - lam_is / rho).astype(x_ref.dtype)
+        return (lam_is.astype(x_ref.dtype) if with_lam_is else None), uplink
+    from repro.kernels import round_tail as rt
+
+    return rt.round_tail_pallas(
+        x_ref, lam_s, x_s, rho, with_lam_is=with_lam_is, block=block,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def dual_from_uplink(uplink, x_s, rho, *, impl: Optional[str] = None,
+                     block: Optional[int] = None):
+    """lam_s' = rho (u - x_s') -- the post-all-reduce dual refresh; one pass."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        out = rho * (uplink.astype(jnp.float32) - x_s.astype(jnp.float32)[None])
+        return out.astype(uplink.dtype)
+    from repro.kernels import round_tail as rt
+
+    return rt.dual_from_uplink_pallas(
+        uplink, x_s, rho, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+def _ef21_row_scales(rowmax, leaf_rows, lo: float):
+    """Expand per-(client, leaf) maxima to per-128-lane-row scales.  The
+    arena pads each leaf to a 128-lane multiple, so leaf boundaries fall on
+    row edges and this is a static segment reduction -- same per-(client,
+    leaf) scale semantics as ``tree_util._qdq``."""
+    m = rowmax.shape[0]
+    parts = []
+    r0 = 0
+    for rk in leaf_rows:
+        s = jnp.max(rowmax[:, r0:r0 + rk], axis=1, keepdims=True) / lo
+        parts.append(jnp.broadcast_to(s, (m, rk)))
+        r0 += rk
+    assert r0 == rowmax.shape[1], (r0, rowmax.shape)
+    scales = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return jnp.maximum(scales, 1e-12)
+
+
+def ef21_update(u, u_hat, bits: int, leaf_rows, *, impl: Optional[str] = None,
+                block: Optional[int] = None):
+    """Fused EF21 quantise-delta over the arena: returns the integrated
+    server view u_hat' = u_hat + qdq(u - u_hat) in TWO full-size passes
+    (rowwise max-abs reduction + apply) instead of the per-leaf
+    tree_sub -> _qdq -> tree_add chain (~4 passes).
+
+    ``leaf_rows``: static per-leaf row counts (``ArenaSpec.leaf_rows()``);
+    the quantisation scale is per (client, leaf), exactly as the pytree path.
+    """
+    impl = _resolve(impl)
+    lo = float(2 ** (bits - 1) - 1)
+    m, w = u.shape
+    rows = w // 128
+    if impl == "xla":
+        d = (u.astype(jnp.float32) - u_hat.astype(jnp.float32)).reshape(m, rows, 128)
+        rowmax = jnp.max(jnp.abs(d), axis=-1)
+        scales = _ef21_row_scales(rowmax, leaf_rows, lo)[..., None]
+        q = jnp.clip(jnp.round(d / scales), -lo, lo)
+        out = u_hat.astype(jnp.float32).reshape(m, rows, 128) + q * scales
+        return out.reshape(m, w).astype(u.dtype)
+    from repro.kernels import round_tail as rt
+
+    interp = impl == "pallas_interpret"
+    rowmax = rt.ef21_rowmax_pallas(u, u_hat, block=block, interpret=interp)
+    scales = _ef21_row_scales(rowmax, leaf_rows, lo)
+    return rt.ef21_apply_pallas(u, u_hat, scales, bits, block=block, interpret=interp)
 
 
 # ---------------------------------------------------------------------------

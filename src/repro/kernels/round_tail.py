@@ -1,0 +1,257 @@
+"""Pallas TPU kernels for the fused GPDMM/AGPDMM round tail over the flat
+client-state arena (``core.arena``).
+
+After the K inner steps, the pytree round runs ~6 separate per-leaf passes
+(``lam_is``, uplink, EF21 sub/quantise/add, participation select, server
+mean, ``lam_s_new``), each re-reading the full ``(m, params)`` state from
+HBM.  On the arena the same math becomes three fused kernels:
+
+  * ``round_tail_pallas``   -- lam_is = rho (x_s - x_ref) - lam_s  and the
+                               uplink u = x_ref - lam_is / rho in ONE pass:
+                               3 reads + 2 writes instead of ~4 passes.
+  * ``ef21_*``              -- EF21 quantise-delta in TWO passes: a rowwise
+                               max-abs reduction (the only full read of
+                               u/u_hat) + the quantise-dequantise-integrate
+                               apply, instead of the tree_sub -> per-leaf
+                               _qdq (2 passes) -> tree_add chain.
+  * ``fused_update_arena_pallas`` -- the eq. (20) inner step over the whole
+                               packed buffer with the server row broadcast
+                               in-kernel, so the K-step scan issues ONE
+                               pallas_call per step instead of one per leaf.
+
+All kernels tile a client row as ``(rows = width // 128, 128)``; the arena
+pads every leaf to a 128-lane multiple, so tiles never straddle leaves and
+the EF21 per-(client, leaf) quantisation scale is a static row-segment
+reduction (same semantics as the per-leaf pytree path).
+
+Server-row operands use a broadcast index map (block ``(j,)`` for every
+client ``i``) -- the (m, width) broadcast is never materialised in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_update import (
+    BLOCK_ROWS, LANES, assert_vmem_budget, ceil_to as _ceil_to, eq20,
+)
+
+
+def _tile(arr, block: int):
+    """(m, width) or (width,) -> (..., rows_p, LANES) with rows_p a multiple
+    of ``block`` (zero-padded)."""
+    w = arr.shape[-1]
+    assert w % LANES == 0, f"arena width {w} not a multiple of {LANES}"
+    rows = w // LANES
+    rows_p = _ceil_to(rows, block)
+    t = arr.reshape(arr.shape[:-1] + (rows, LANES))
+    if rows_p != rows:
+        pad = [(0, 0)] * (t.ndim - 2) + [(0, rows_p - rows), (0, 0)]
+        t = jnp.pad(t, pad)
+    return t, rows, rows_p
+
+
+def _untile(t, width: int, lead):
+    return t.reshape(lead + (-1,))[..., :width]
+
+
+def _resolve_block(block, rows: int) -> int:
+    block = block or BLOCK_ROWS
+    # clamp to the (8-sublane-aligned) problem size so small paper-scale
+    # problems don't pad a 1-row state out to a full default block
+    return min(block, max(8, _ceil_to(rows, 8)))
+
+
+# ---------------------------------------------------------------------------
+# (a) lam_is + uplink in one pass
+# ---------------------------------------------------------------------------
+
+def _round_tail_kernel(xr_ref, lam_ref, xs_ref, lam_is_ref, up_ref, *, rho: float):
+    xr = xr_ref[0].astype(jnp.float32)
+    lam = lam_ref[0].astype(jnp.float32)
+    xs = xs_ref[...].astype(jnp.float32)
+    lam_is = rho * (xs - xr) - lam
+    lam_is_ref[0] = lam_is.astype(lam_is_ref.dtype)
+    up_ref[0] = (xr - lam_is / rho).astype(up_ref.dtype)
+
+
+def _uplink_kernel(xr_ref, lam_ref, xs_ref, up_ref, *, rho: float):
+    # uplink only (lam_is algebraically eliminated): u = 2 x_ref - x_s + lam/rho
+    xr = xr_ref[0].astype(jnp.float32)
+    lam = lam_ref[0].astype(jnp.float32)
+    xs = xs_ref[...].astype(jnp.float32)
+    up_ref[0] = (xr - (rho * (xs - xr) - lam) / rho).astype(up_ref.dtype)
+
+
+def round_tail_pallas(x_ref, lam_s, x_s, rho, *, with_lam_is: bool = True,
+                      block=None, interpret: bool = False):
+    """x_ref, lam_s: (m, width); x_s: (width,) server row.  Returns
+    (lam_is, uplink), both (m, width).  ``with_lam_is=False`` (the training
+    hot path: both callers discard lam_is outside traces) skips the second
+    output entirely -- 3 reads + 1 write -- and returns (None, uplink)."""
+    m, w = x_ref.shape
+    dtype = x_ref.dtype
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(5 if with_lam_is else 4, br)
+    xt, _, rows_p = _tile(x_ref, br)
+    lt, _, _ = _tile(lam_s, br)
+    st, _, _ = _tile(x_s, br)
+    grid = (m, rows_p // br)
+    client_bs = pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0))
+    server_bs = pl.BlockSpec((br, LANES), lambda i, j: (j, 0))
+    out_sds = jax.ShapeDtypeStruct((m, rows_p, LANES), dtype)
+    if not with_lam_is:
+        up = pl.pallas_call(
+            functools.partial(_uplink_kernel, rho=float(rho)),
+            grid=grid,
+            in_specs=[client_bs, client_bs, server_bs],
+            out_specs=client_bs,
+            out_shape=out_sds,
+            interpret=interpret,
+        )(xt, lt, st)
+        return None, _untile(up, w, (m,))
+    lam_is, up = pl.pallas_call(
+        functools.partial(_round_tail_kernel, rho=float(rho)),
+        grid=grid,
+        in_specs=[client_bs, client_bs, server_bs],
+        out_specs=(client_bs, client_bs),
+        out_shape=(out_sds, out_sds),
+        interpret=interpret,
+    )(xt, lt, st)
+    return _untile(lam_is, w, (m,)), _untile(up, w, (m,))
+
+
+# ---------------------------------------------------------------------------
+# lam_s' = rho (u - x_s') -- the post-all-reduce dual refresh
+# ---------------------------------------------------------------------------
+
+def _dual_kernel(u_ref, xs_ref, o_ref, *, rho: float):
+    u = u_ref[0].astype(jnp.float32)
+    xs = xs_ref[...].astype(jnp.float32)
+    o_ref[0] = (rho * (u - xs)).astype(o_ref.dtype)
+
+
+def dual_from_uplink_pallas(uplink, x_s, rho, *, block=None, interpret: bool = False):
+    """uplink: (m, width); x_s: (width,).  Returns lam_s' = rho (u - x_s)."""
+    m, w = uplink.shape
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(3, br)
+    ut, _, rows_p = _tile(uplink, br)
+    st, _, _ = _tile(x_s, br)
+    out = pl.pallas_call(
+        functools.partial(_dual_kernel, rho=float(rho)),
+        grid=(m, rows_p // br),
+        in_specs=[
+            pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((br, LANES), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, rows_p, LANES), uplink.dtype),
+        interpret=interpret,
+    )(ut, st)
+    return _untile(out, w, (m,))
+
+
+# ---------------------------------------------------------------------------
+# (b) fused EF21: rowwise max-abs reduce + quantise-dequantise-integrate
+# ---------------------------------------------------------------------------
+
+def _rowmax_kernel(u_ref, uh_ref, o_ref):
+    d = u_ref[0].astype(jnp.float32) - uh_ref[0].astype(jnp.float32)
+    o_ref[0] = jnp.max(jnp.abs(d), axis=-1)
+
+
+def ef21_rowmax_pallas(u, u_hat, *, block=None, interpret: bool = False):
+    """Per-(client, 128-lane row) max-abs of (u - u_hat): (m, rows) f32.
+    The only full-size read of the reduction pass."""
+    m, w = u.shape
+    rows = w // LANES
+    br = _resolve_block(block, rows)
+    assert_vmem_budget(2, br)
+    ut, _, rows_p = _tile(u, br)
+    ht, _, _ = _tile(u_hat, br)
+    out = pl.pallas_call(
+        _rowmax_kernel,
+        grid=(m, rows_p // br),
+        in_specs=[
+            pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, rows_p), jnp.float32),
+        interpret=interpret,
+    )(ut, ht)
+    return out[:, :rows]
+
+
+def _qdq_kernel(u_ref, uh_ref, scale_ref, o_ref, *, lo: float):
+    u = u_ref[0].astype(jnp.float32)
+    uh = uh_ref[0].astype(jnp.float32)
+    s = scale_ref[0][:, None]  # (br, 1) broadcast over lanes
+    q = jnp.clip(jnp.round((u - uh) / s), -lo, lo)
+    o_ref[0] = (uh + q * s).astype(o_ref.dtype)
+
+
+def ef21_apply_pallas(u, u_hat, row_scales, bits: int, *, block=None, interpret: bool = False):
+    """Integrated server view u_hat' = u_hat + qdq(u - u_hat) in one pass.
+    ``row_scales``: (m, rows) f32 per-128-lane-row scale (already max/lo,
+    clamped), expanded from the per-leaf segment maxima."""
+    m, w = u.shape
+    rows = w // LANES
+    br = _resolve_block(block, rows)
+    assert_vmem_budget(4, br)
+    lo = float(2 ** (bits - 1) - 1)
+    ut, _, rows_p = _tile(u, br)
+    ht, _, _ = _tile(u_hat, br)
+    st = row_scales
+    if rows_p != rows:
+        st = jnp.pad(st, ((0, 0), (0, rows_p - rows)), constant_values=1.0)
+    out = pl.pallas_call(
+        functools.partial(_qdq_kernel, lo=lo),
+        grid=(m, rows_p // br),
+        in_specs=[
+            pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, br), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, rows_p, LANES), u.dtype),
+        interpret=interpret,
+    )(ut, ht, st)
+    return _untile(out, w, (m,))
+
+
+# ---------------------------------------------------------------------------
+# (c) arena-wide eq. (20) inner step with in-kernel server-row broadcast
+# ---------------------------------------------------------------------------
+
+def _update_kernel(x_ref, g_ref, xs_ref, lam_ref, o_ref, *, step: float, rho: float):
+    f32 = jnp.float32
+    out = eq20(x_ref[0].astype(f32), g_ref[0].astype(f32),
+               xs_ref[...].astype(f32), lam_ref[0].astype(f32), step, rho)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def fused_update_arena_pallas(x, g, x_s, lam, step, rho, *, block=None, interpret: bool = False):
+    """x, g, lam: (m, width); x_s: (width,) server row (broadcast in-kernel).
+    One pallas_call over the whole packed buffer."""
+    m, w = x.shape
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(5, br)
+    xt, _, rows_p = _tile(x, br)
+    gt, _, _ = _tile(g, br)
+    st, _, _ = _tile(x_s, br)
+    lt, _, _ = _tile(lam, br)
+    client_bs = pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0))
+    out = pl.pallas_call(
+        functools.partial(_update_kernel, step=float(step), rho=float(rho)),
+        grid=(m, rows_p // br),
+        in_specs=[client_bs, client_bs, pl.BlockSpec((br, LANES), lambda i, j: (j, 0)), client_bs],
+        out_specs=client_bs,
+        out_shape=jax.ShapeDtypeStruct((m, rows_p, LANES), x.dtype),
+        interpret=interpret,
+    )(xt, gt, st, lt)
+    return _untile(out, w, (m,))

@@ -20,7 +20,7 @@ import jax
 
 from repro.configs import get_arch, get_shape
 from repro.launch import hlo_stats
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.launch.steps import build_step
 
 REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "perf"
@@ -44,7 +44,7 @@ def _parse_val(v: str):
 def measure(cfg, shape, *, multi_pod=False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = build_step(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(
             bundle.fn,
             in_shardings=bundle.in_shardings,

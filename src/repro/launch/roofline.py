@@ -28,7 +28,7 @@ import jax
 
 from repro.configs import ARCHS, SHAPES, get_arch, get_shape
 from repro.launch import hlo_stats
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, mesh_context
 from repro.launch.steps import build_step
 
 REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "roofline"
@@ -58,7 +58,7 @@ def _probe_cfg(cfg, n_units: int):
 
 def _measure(cfg, shape, mesh):
     bundle = build_step(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(
             bundle.fn, in_shardings=bundle.in_shardings, out_shardings=bundle.out_shardings
         ).lower(*bundle.args)

@@ -119,13 +119,19 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
     stacked = sh.stacked_shardings(mesh, p_shard, layout=layout)
     rep = sh.replicated(mesh)
 
+    # arena-resident client state (use_arena, non-fsdp): one (m, width)
+    # buffer -- client dim over the client axes, packed width replicated
+    # (leaves are concatenated, so per-leaf TP specs don't apply)
+    cax = sh.client_axes(mesh) if layout == "client_axis" else None
+    arena_shard = NamedSharding(mesh, P(cax, None))
+
     def state_shardings(shapes):
         out = {}
         for k, v in shapes.items():
             if k in ("x_s", "c"):
                 out[k] = p_shard
             elif k in ("lam_s", "x_c", "c_i", "z_s", "u_hat"):
-                out[k] = stacked
+                out[k] = arena_shard if isinstance(v, jax.ShapeDtypeStruct) else stacked
             else:  # round counter etc.
                 out[k] = jax.tree.map(lambda _: rep, v)
         return out

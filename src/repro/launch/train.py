@@ -14,6 +14,7 @@ import dataclasses
 import json
 import pathlib
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +66,9 @@ def run(
     def client_grad(p, b):
         return jax.grad(lambda q: model.loss(q, b)[0])(p)
 
-    @jax.jit
+    # donate the round state: the arena/round update aliases its input
+    # buffers in place instead of holding two copies of the (m, params) state
+    @partial(jax.jit, donate_argnums=(0,))
     def step_fn(state, batch):
         return fed.round(state, client_grad, batch)
 

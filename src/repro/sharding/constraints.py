@@ -12,10 +12,25 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 
+def _active_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()  # jax >= 0.5
+        if not mesh.empty:
+            return mesh
+    except AttributeError:
+        pass
+    # jax 0.4.x, or a newer jax driven through the legacy `with mesh:`
+    # context (launch.mesh.mesh_context falls back to it when jax.set_mesh
+    # is missing): read the thread-local physical mesh
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
 def constrain(x, *axes):
     """axes: one entry per dim of x -- a mesh-axis name, tuple of names, or
     None.  Silently no-ops outside a mesh context."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _active_mesh()
     if mesh.empty:
         return x
     names = set(mesh.axis_names)

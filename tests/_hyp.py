@@ -1,0 +1,50 @@
+"""Optional-hypothesis shim: ``from _hyp import given, settings, st``.
+
+When hypothesis is installed (the ``[test]`` extra) this re-exports the real
+``given``/``settings``/``strategies``.  When it is not, the stand-ins turn
+every ``@given(...)`` test into a zero-argument test that calls
+``pytest.importorskip("hypothesis")`` -- so the property-based blocks skip
+cleanly instead of erroring the whole module at collection time.
+"""
+from __future__ import annotations
+
+import functools
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    def given(*_a, **_k):
+        def deco(f):
+            # zero-arg replacement: pytest must not treat the strategy
+            # parameters as fixtures, and the skip must fire at run time
+            @functools.wraps(f)
+            def _skipped():
+                pytest.importorskip("hypothesis")
+
+            # wraps() copies __wrapped__/__doc__ but the signature pytest
+            # introspects is the replacement's (no args), which is the point
+            del _skipped.__wrapped__
+            return _skipped
+
+        return deco
+
+    class _Strategies:
+        """Attribute sink so module-level strategy expressions still parse."""
+
+        @staticmethod
+        def composite(f):
+            return lambda *a, **k: None
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -1,0 +1,362 @@
+"""Flat client-state arena + fused round-tail kernels (ISSUE 1 tentpole).
+
+Covers: pack/unpack round trips across dtypes and odd (non-multiple-of-128)
+leaf sizes, interpret-mode parity of every round-tail kernel against the
+per-leaf pytree reference, arena-vs-pytree parity of whole GPDMM/AGPDMM/
+FedSplit rounds (incl. the EF21-quantised and partial-participation
+variants), the KKT invariant on the arena path, and the VMEM budget guard.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs.base import FederatedConfig
+from repro.core import arena, fedsplit, make, quadratic
+from repro.core import tree_util as T
+from repro.kernels import ops
+from repro.kernels.fused_update import BLOCK_ROWS, fused_update_pallas
+
+IMPLS = ["xla", "pallas_interpret"]
+
+# odd, non-multiple-of-128 leaf sizes on purpose (incl. a scalar)
+ODD_TREE_SHAPES = {"a": (7,), "b": {"w": (3, 50), "s": ()}, "c": (130,)}
+
+
+def odd_tree(key, dtype=jnp.float32, m=None):
+    leaves = {}
+    ks = iter(jax.random.split(key, 8))
+
+    def mk(shape):
+        lead = () if m is None else (m,)
+        return jax.random.normal(next(ks), lead + shape).astype(dtype)
+
+    leaves = {"a": mk((7,)), "b": {"w": mk((3, 50)), "s": mk(())}, "c": mk((130,))}
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pack_unpack_roundtrip(dtype):
+    tree = odd_tree(jax.random.key(0), dtype)
+    spec = arena.ArenaSpec.from_tree(tree)
+    row = spec.pack(tree)
+    assert row.shape == (spec.width,) and spec.width % arena.LANES == 0
+    back = spec.unpack(row)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pack_unpack_stacked_roundtrip(dtype):
+    m = 5
+    tree = odd_tree(jax.random.key(1), dtype, m=m)
+    spec = arena.ArenaSpec.from_tree(tree, stacked=True)
+    buf = spec.pack_stacked(tree)
+    assert buf.shape == (m, spec.width)
+    back = spec.unpack_stacked(buf)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_slice_table_lane_aligned():
+    spec = arena.ArenaSpec.from_tree(odd_tree(jax.random.key(2)))
+    off = 0
+    for e in spec.leaves:
+        assert e.offset == off and e.offset % arena.LANES == 0
+        assert e.padded % arena.LANES == 0 and e.padded >= e.size
+        off += e.padded
+    assert spec.width == off
+    assert sum(spec.leaf_rows()) == spec.n_rows
+
+
+def test_padding_stays_zero():
+    tree = odd_tree(jax.random.key(3), m=4)
+    spec = arena.ArenaSpec.from_tree(tree, stacked=True)
+    buf = spec.pack_stacked(tree)
+    mask = np.ones((spec.width,), bool)
+    for e in spec.leaves:
+        mask[e.offset:e.offset + e.size] = False
+    assert np.all(np.asarray(buf)[:, mask] == 0.0)
+
+
+def test_leaf_view_matches_leaf():
+    tree = odd_tree(jax.random.key(4), m=3)
+    spec = arena.ArenaSpec.from_tree(tree, stacked=True)
+    buf = spec.pack_stacked(tree)
+    leaves = jax.tree.leaves(tree)
+    for i in range(len(spec.leaves)):
+        np.testing.assert_array_equal(np.asarray(spec.leaf_view(buf, i)), np.asarray(leaves[i]))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity (interpret mode) vs the pytree reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_round_tail_parity(impl, dtype):
+    m, rho = 5, 2.5
+    tree = odd_tree(jax.random.key(5), dtype, m=m)
+    spec = arena.ArenaSpec.from_tree(tree, stacked=True)
+    lam_tree = odd_tree(jax.random.key(6), dtype, m=m)
+    xs_tree = odd_tree(jax.random.key(7), dtype)
+    xs_b = T.tree_broadcast(xs_tree, m)
+    lam_is_t = T.tmap(lambda s, xr, l: rho * (s - xr) - l, xs_b, tree, lam_tree)
+    up_t = T.tmap(lambda xr, l: xr - l / rho, tree, lam_is_t)
+
+    lam_is, up = ops.round_tail(
+        spec.pack_stacked(tree), spec.pack_stacked(lam_tree), spec.pack(xs_tree), rho, impl=impl
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(lam_is, np.float32), np.asarray(spec.pack_stacked(lam_is_t), np.float32),
+        atol=tol, rtol=tol)
+    np.testing.assert_allclose(
+        np.asarray(up, np.float32), np.asarray(spec.pack_stacked(up_t), np.float32),
+        atol=tol, rtol=tol)
+
+    lam_new = ops.dual_from_uplink(up, spec.pack(xs_tree), rho, impl=impl)
+    exp = rho * (np.asarray(up, np.float32) - np.asarray(spec.pack(xs_tree), np.float32)[None])
+    np.testing.assert_allclose(np.asarray(lam_new, np.float32), exp, atol=tol, rtol=tol)
+
+    # uplink-only hot-path variant: same uplink, no lam_is output
+    none_lam, up2 = ops.round_tail(
+        spec.pack_stacked(tree), spec.pack_stacked(lam_tree), spec.pack(xs_tree), rho,
+        with_lam_is=False, impl=impl)
+    assert none_lam is None
+    np.testing.assert_allclose(np.asarray(up2, np.float32), np.asarray(up, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ef21_parity(impl, bits, dtype):
+    """Fused EF21 == per-leaf tree_quantize_delta, incl. the per-(client,
+    leaf) max-abs quantisation scale granularity."""
+    m = 6
+    u_tree = odd_tree(jax.random.key(8), dtype, m=m)
+    uh_tree = jax.tree.map(lambda t: t * 0.7, u_tree)
+    spec = arena.ArenaSpec.from_tree(u_tree, stacked=True)
+    ref = spec.pack_stacked(T.tree_quantize_delta(u_tree, uh_tree, bits))
+    got = ops.ef21_update(
+        spec.pack_stacked(u_tree), spec.pack_stacked(uh_tree), bits, spec.leaf_rows(), impl=impl
+    )
+    tol = 1e-6 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fused_update_arena_parity(impl):
+    m = 4
+    tree = odd_tree(jax.random.key(9), m=m)
+    spec = arena.ArenaSpec.from_tree(tree, stacked=True)
+    x = spec.pack_stacked(tree)
+    g = x * 0.3
+    lam = x * 0.1 + 0.05
+    xs = spec.pack(odd_tree(jax.random.key(10)))
+    out = ops.fused_update_arena(x, g, xs, lam, 0.05, 3.0, impl=impl)
+    exp = np.asarray(x) - 0.05 * (np.asarray(g) + 3.0 * (np.asarray(x) - np.asarray(xs)[None]) + np.asarray(lam))
+    np.testing.assert_allclose(np.asarray(out), exp, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fused_update_nolam(impl):
+    """lam=None drops the dual term (FedSplit's lam-free step): one fewer
+    HBM read, same math as lam=0."""
+    k = jax.random.key(11)
+    x, g, xs = (jax.random.normal(jax.random.fold_in(k, i), (5, 300)) for i in range(3))
+    out = ops.fused_update(x, g, xs, None, 0.05, 3.0, impl=impl)
+    exp = np.asarray(x) - 0.05 * (np.asarray(g) + 3.0 * (np.asarray(x) - np.asarray(xs)))
+    np.testing.assert_allclose(np.asarray(out), exp, atol=1e-5, rtol=1e-5)
+
+
+def test_vmem_budget_guard():
+    """block sizes whose f32 working set exceeds the documented cap are
+    rejected; the unified default passes."""
+    x = jnp.ones((256,))
+    with pytest.raises(AssertionError, match="VMEM"):
+        fused_update_pallas(x, x, x, x, 0.1, 1.0, block=100_000, interpret=True)
+    out = fused_update_pallas(x, x, x, x, 0.1, 1.0, block=BLOCK_ROWS, interpret=True)
+    assert out.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# whole-round parity: arena path == pytree path
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prob():
+    return quadratic.generate(jax.random.key(0), m=8, n=120, d=24)
+
+
+VARIANTS = {
+    "plain": {},
+    "ef21": {"uplink_bits": 8},
+    "partial": {"participation": 0.5},
+    "ef21+partial": {"uplink_bits": 8, "participation": 0.5},
+    "last_iter": {"use_avg": False},
+}
+
+
+@pytest.mark.parametrize("algo", ["gpdmm", "agpdmm"])
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_round_parity_arena_vs_pytree(prob, algo, variant):
+    """GPDMM/AGPDMM rounds on the arena path are bitwise-comparable (within
+    dtype tolerance) to the pytree path -- the ISSUE's acceptance criterion."""
+    kw = dict(algorithm=algo, inner_steps=3, eta=0.5 / prob.L, **VARIANTS[variant])
+    x0 = jnp.zeros((prob.d,))
+    batch = prob.batch()
+    states = {}
+    for use_arena in [True, False]:
+        opt = make(FederatedConfig(use_arena=use_arena, **kw))
+        s = opt.init(x0, prob.m)
+        for _ in range(5):
+            s, metrics = opt.round(s, prob.grad, batch)
+        states[use_arena] = (s, metrics)
+    sa, ma = states[True]
+    sp, mp = states[False]
+    assert set(sa) == set(sp)
+    spec = arena.ArenaSpec.from_tree(sp["x_s"])
+    for ka in sorted(sa):
+        got, want = sa[ka], sp[ka]
+        if ka != "x_s" and ka != "round":
+            want = spec.pack_stacked(want)  # arena path keeps clients packed
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(got)[0]), np.asarray(jax.tree.leaves(want)[0]),
+            atol=1e-5, rtol=1e-5, err_msg=f"{algo}/{variant}: state[{ka}]")
+    for km in ma:
+        np.testing.assert_allclose(float(ma[km]), float(mp[km]), atol=1e-4,
+                                   err_msg=f"{algo}/{variant}: metrics[{km}]")
+
+
+@pytest.mark.parametrize("init", ["z", "xs"])
+def test_fedsplit_round_parity(prob, init):
+    x0 = jnp.zeros((prob.d,))
+    batch = prob.batch()
+    states = {}
+    for use_arena in [True, False]:
+        opt = make(FederatedConfig(algorithm="fedsplit", inner_steps=3, eta=1.0 / prob.L,
+                                   fedsplit_init=init, rho=prob.L / 10, use_arena=use_arena))
+        s = opt.init(x0, prob.m)
+        for _ in range(5):
+            s, _ = opt.round(s, prob.grad, batch)
+        states[use_arena] = s
+    np.testing.assert_allclose(np.asarray(states[True]["x_s"]), np.asarray(states[False]["x_s"]),
+                               atol=1e-5, rtol=1e-5)
+    spec = arena.ArenaSpec.from_tree(states[False]["x_s"])
+    np.testing.assert_allclose(np.asarray(states[True]["z_s"]),
+                               np.asarray(spec.pack_stacked(states[False]["z_s"])),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_trace_parity(prob):
+    """return_trace quantities (theory checks) match across paths."""
+    x0 = jnp.zeros((prob.d,))
+    traces = {}
+    for use_arena in [True, False]:
+        opt = make(FederatedConfig(algorithm="gpdmm", inner_steps=3, eta=0.5 / prob.L,
+                                   use_arena=use_arena))
+        s = opt.init(x0, prob.m)
+        s, metrics = opt.round(s, prob.grad, prob.batch(), return_trace=True)
+        traces[use_arena] = metrics["trace"]
+    for k in traces[True]:
+        np.testing.assert_allclose(np.asarray(traces[True][k]), np.asarray(traces[False][k]),
+                                   atol=1e-5, rtol=1e-5, err_msg=k)
+
+
+def test_mixed_dtype_falls_back_to_pytree():
+    """Mixed-dtype trees (bf16 weights + f32 norms) take the pytree path:
+    a single arena buffer would promote everything to the widest dtype --
+    2x the client-state HBM and a numerical divergence."""
+    params = {"w": jnp.ones((37, 5), jnp.bfloat16), "b": jnp.zeros((3,), jnp.float32)}
+
+    def grad_fn(p, _b):
+        return jax.tree.map(lambda x: (0.3 * x.astype(jnp.float32)).astype(x.dtype), p)
+
+    batch = {"d": jnp.zeros((4, 1))}
+    outs = {}
+    for use_arena in [True, False]:
+        opt = make(FederatedConfig(algorithm="gpdmm", inner_steps=2, eta=0.1,
+                                   use_arena=use_arena))
+        s = opt.init(params, 4)
+        # both configs must produce the identical (pytree) state layout
+        assert jax.tree.leaves(s["lam_s"])[0].shape[1:] != (0,)  # smoke
+        for _ in range(2):
+            s, _ = opt.round(s, grad_fn, batch)
+        outs[use_arena] = s["x_s"]
+    for a, b in zip(jax.tree.leaves(outs[True]), jax.tree.leaves(outs[False])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_svrg_parity():
+    """SVRG per-step-batch inner loop matches across paths."""
+    key = jax.random.key(5)
+    m, d, K = 4, 16, 3
+    params = jnp.zeros((d,))
+    batch = {"w": jax.random.normal(key, (K, m, d))}
+
+    def grad_fn(x, b):
+        return 0.3 * x + 0.01 * b["w"]
+
+    outs = {}
+    for use_arena in [True, False]:
+        opt = make(FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=0.1,
+                                   variance_reduction="svrg", use_arena=use_arena))
+        s = opt.init(params, m)
+        for _ in range(3):
+            s, _ = opt.round(s, grad_fn, batch, per_step_batches=True)
+        outs[use_arena] = s["x_s"]
+    np.testing.assert_allclose(np.asarray(outs[True]), np.asarray(outs[False]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# KKT invariant (eq. 25) on the arena path, for ANY parameter pytree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["gpdmm", "agpdmm"])
+def test_kkt_invariant_arena(prob, algo):
+    opt = make(FederatedConfig(algorithm=algo, inner_steps=3, eta=0.5 / prob.L, use_arena=True))
+    s = opt.init(jnp.zeros((prob.d,)), prob.m)
+    for _ in range(10):
+        s, metrics = opt.round(s, prob.grad, prob.batch())
+        assert float(metrics["lam_sum_norm"]) < 1e-3
+
+
+@st.composite
+def _pytrees(draw):
+    n_leaves = draw(st.integers(1, 3))
+    tree = {}
+    for i in range(n_leaves):
+        shape = tuple(draw(st.lists(st.integers(1, 6), min_size=1, max_size=2)))
+        tree[f"w{i}"] = jnp.full(shape, float(i + 1))
+    return tree
+
+
+@settings(max_examples=10, deadline=None)
+@given(params=_pytrees(), algo=st.sampled_from(["gpdmm", "agpdmm"]),
+       m=st.integers(2, 4), k=st.integers(1, 3))
+def test_kkt_invariant_arena_property(params, algo, m, k):
+    """sum_i lam_{s|i} == 0 holds on the arena path for arbitrary pytrees."""
+    opt = make(FederatedConfig(algorithm=algo, inner_steps=k, eta=0.1, use_arena=True))
+
+    def grad_fn(p, _b):
+        return jax.tree.map(lambda x: 0.3 * x, p)
+
+    s = opt.init(params, m)
+    s2, metrics = opt.round(s, grad_fn, {"dummy": jnp.zeros((m, 1))})
+    assert jax.tree.structure(s2) == jax.tree.structure(s)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(s2)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert float(metrics["lam_sum_norm"]) < 1e-4

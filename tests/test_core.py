@@ -244,7 +244,7 @@ def test_quantized_uplink_delta_encoding_matters(prob, x0):
 # property: the optimisers are structure-preserving pytree transformations
 # ---------------------------------------------------------------------------
 
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from _hyp import given, settings, st  # noqa: E402  (skips cleanly w/o hypothesis)
 
 
 @st.composite

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import FederatedConfig
-from repro.core import make, quadratic, theory
+from repro.core import arena, make, quadratic, theory
+from repro.core import tree_util as T
 from repro.core.api import resolved_rho
 
 
@@ -37,7 +38,9 @@ def test_q_functional_linear_decay(prob):
     lam_star = prob.lam_star()
 
     qs = []
-    x_c_prev = s["x_c"]
+    # x_i^{0,K} = x_s^1 = x0 (Alg. 1); built here rather than read from the
+    # state, whose client half is arena-resident on the default path
+    x_c_prev = T.tree_broadcast(x0, prob.m)
     for r in range(25):
         s, metrics = opt.round(s, prob.grad, prob.batch(), return_trace=True)
         tr = metrics["trace"]
@@ -71,7 +74,9 @@ def test_kkt_residuals_vanish(prob):
     rf = jax.jit(lambda s: opt.round(s, prob.grad, prob.batch())[0])
     for _ in range(300):
         s = rf(s)
-    res = theory.kkt_residuals(prob, s["x_s"], s["lam_s"])
+    # lam_s is arena-resident (m, width) on the default path; unpack it
+    spec = arena.ArenaSpec.from_tree(s["x_s"])
+    res = theory.kkt_residuals(prob, s["x_s"], spec.unpack_stacked(s["lam_s"]))
     assert float(res["dual_sum"]) < 1e-3
     assert float(res["primal_gap"]) < 1e-2
     assert float(res["grad_match"]) < 1e-1
