@@ -1,0 +1,102 @@
+"""CI wall-time regression gate for the round benchmark.
+
+Compares a fresh ``round_bench`` run against the committed
+``BENCH_round.json`` baseline and FAILS (exit 1) if ``us_per_round`` for any
+gated cell -- (algo=gpdmm, variant=plain, path=arena), per problem shape /
+oracle / driver -- regresses more than ``--max-regress`` (default 20%).
+
+Hardware neutrality: the committed baseline was produced on a different
+machine than the CI runner, and absolute wall times swing with runner
+class / load.  When the same-run pytree sibling cell (path=pytree,
+oracle=tree, same problem/variant/driver/K) exists in both files, the gate
+therefore compares the NORMALISED time arena/pytree against the baseline's
+same ratio -- a slow runner slows both paths, the ratio doesn't move;
+only a change that makes the gated hot path slower *relative to the
+reference path it must beat* trips the gate.  Cells without a sibling fall
+back to the absolute comparison.
+
+Records are matched on the full (problem, algo, variant, path, oracle,
+driver) key at the same K; cells present in only one file are reported but
+never fail the gate (so adding/removing shapes doesn't break CI -- the gate
+guards the HOT PATH's wall time, not the bench's schema).
+
+    PYTHONPATH=src:. python benchmarks/round_bench.py --out BENCH_round_fresh.json
+    PYTHONPATH=src:. python benchmarks/regression_gate.py \
+        --baseline BENCH_round.json --fresh BENCH_round_fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+GATED = {"algo": "gpdmm", "variant": "plain", "path": "arena"}
+KEY_FIELDS = ("problem", "algo", "variant", "path", "oracle", "driver", "K")
+
+
+def _index(payload):
+    out = {}
+    for rec in payload["trajectory"]:
+        # pre-ISSUE-2 baselines lack oracle/driver: default to the cell the
+        # old bench actually measured
+        key = tuple(rec.get(f, {"oracle": "native", "driver": "per_round"}.get(f))
+                    for f in KEY_FIELDS)
+        out[key] = rec
+    return out
+
+
+def _sibling_key(key):
+    """The same-run pytree reference cell for a gated arena cell."""
+    problem, algo, variant, _path, _oracle, driver, K = key
+    return (problem, algo, variant, "pytree", "tree", driver, K)
+
+
+def gate(baseline_path: str, fresh_path: str, max_regress: float) -> int:
+    base = _index(json.loads(pathlib.Path(baseline_path).read_text()))
+    fresh = _index(json.loads(pathlib.Path(fresh_path).read_text()))
+    failures, checked = [], 0
+    for key, rec in sorted(fresh.items()):
+        if any(rec.get(k) != v for k, v in GATED.items()):
+            continue
+        ref = base.get(key)
+        if ref is None:
+            print(f"[gate] NEW cell (no baseline, skipped): {key}")
+            continue
+        checked += 1
+        sib = _sibling_key(key)
+        if sib in fresh and sib in base:
+            # hardware-neutral: arena time normalised by the same run's
+            # pytree sibling, compared against the baseline's same ratio
+            got = rec["us_per_round"] / max(fresh[sib]["us_per_round"], 1e-9)
+            want = ref["us_per_round"] / max(base[sib]["us_per_round"], 1e-9)
+            unit = "x pytree"
+        else:
+            got, want = rec["us_per_round"], ref["us_per_round"]
+            unit = "us/round (absolute: no pytree sibling)"
+        bad = got > want * (1.0 + max_regress)
+        status = "FAIL" if bad else "ok"
+        print(f"[gate] {status} {key}: {want:.3f} -> {got:.3f} {unit} "
+              f"(x{got / max(want, 1e-9):.2f} of baseline)")
+        if bad:
+            failures.append(key)
+    for key in sorted(set(base) - set(fresh)):
+        if all(base[key].get(k) == v for k, v in GATED.items()):
+            print(f"[gate] baseline cell missing from fresh run: {key}")
+    print(f"[gate] {checked} gated cells checked, {len(failures)} regression(s) "
+          f"(threshold +{max_regress:.0%})")
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_round.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="allowed fractional us_per_round increase")
+    args = ap.parse_args()
+    sys.exit(gate(args.baseline, args.fresh, args.max_regress))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,7 @@
 """Whole-round benchmark: per-leaf pytree path vs flat-arena + fused
-round-tail path (ISSUE 1 tentpole acceptance).
+round-tail path (ISSUE 1 tentpole acceptance), extended with the ISSUE 2
+inner-loop rework: arena-native gradient oracles (0 boundary passes per
+step), and the round-batched ``lax.scan`` driver (one dispatch per R rounds).
 
 The federated round is memory-bound elementwise math over the stacked
 ``(m, params)`` client state, so the figure of merit is full-state HBM
@@ -13,23 +15,26 @@ row, 1/m of the state, excluded as O(1/m)).
 Three problem shapes:
   * ``small``   -- the paper's least-squares scale (one tiny leaf).
   * ``lm_flat`` -- LM-scale flat parameter buffer (one (2^20,) leaf, m x N
-                   = 8M f32).  The arena layout is exactly this flat view,
-                   so the gradient boundary costs nothing.
+                   = 8M f32).  The arena layout is exactly this flat view.
   * ``lm_tree`` -- the same 1M params as a multi-leaf transformer-ish tree.
-                   Here each inner step pays an unpack(x)/pack(g) round
-                   trip at the pytree gradient oracle boundary (+4 passes
-                   per step), reported honestly: the arena still wins the
-                   round TAIL, the inner-loop boundary is the price of
-                   per-leaf grads (on TPU the slices/concat fuse into the
-                   grad computation; XLA:CPU materialises them).
+                   With a plain pytree grad each inner step pays an
+                   unpack(x)/pack(g) round trip at the gradient-oracle
+                   boundary (+4 passes/step, ``oracle=boundary``); an
+                   arena-native oracle (``oracle=native``) evaluates on the
+                   packed buffer and pays 0.
 
-Gradient math itself is identical on both paths (a trivial linear grad
-keeps the round tail visible).  Emits a ``BENCH_round.json`` trajectory
-(one record per problem x algorithm x variant x path) plus the CSV lines
-the other benches use.
+Record columns beyond ISSUE 1: ``oracle`` ("tree" = per-leaf pytree grad,
+"boundary" = arena via the unpack/pack wrapper, "native" = arena-native
+grad oracle) and ``driver`` ("per_round" = one dispatch per round,
+"scan8" = 8 rounds per dispatch via core.make_scan_rounds; us_per_round is
+the per-round share).  Gradient math itself is identical on all paths (a
+trivial linear grad keeps the round tail visible).  Emits the
+``BENCH_round.json`` trajectory consumed by ``benchmarks/regression_gate.py``
+(the CI wall-time gate) plus the CSV lines the other benches use.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 
@@ -38,7 +43,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.configs.base import FederatedConfig
-from repro.core import make
+from repro.core import make, make_oracle, make_scan_rounds
 
 PROBLEMS = {
     "small": {"m": 8, "shapes": {"w": (24,)}},
@@ -62,6 +67,8 @@ VARIANTS = {
     "partial": {"participation": 0.5},
 }
 
+SCAN_R = 8  # rounds per dispatch for the scan-driver records
+
 
 def _params(shapes):
     k = jax.random.key(0)
@@ -71,14 +78,22 @@ def _params(shapes):
     }
 
 
-def _grad_fn(p, _b):
+def _tree_grad(p, _b):
     # grad of 0.15||x||^2: memory-bound, so the round tail stays visible
     return jax.tree.map(lambda x: 0.3 * x, p)
 
 
-def round_passes(algo: str, variant: str, K: int, *, arena: bool, multi_leaf: bool) -> int:
+# the same linear grad as an arena-native oracle: evaluated directly on the
+# packed (m, width) buffer -- zero boundary passes per inner step
+_native_grad = make_oracle(_tree_grad, grad_arena=lambda spec: (lambda xa, b: 0.3 * xa))
+
+ORACLES = {"tree": _tree_grad, "boundary": _tree_grad, "native": _native_grad}
+
+
+def round_passes(algo: str, variant: str, K: int, *, arena: bool,
+                 multi_leaf: bool, oracle: str) -> int:
     """Full-(m, N) elementwise HBM passes per round (reads + writes), grad
-    math excluded (identical on both paths).  One fused_update = 4r + 1w."""
+    math excluded (identical on all paths).  One fused_update = 4r + 1w."""
     if not arena:
         n = 1  # x_s broadcast to (m, N), materialised once per round
         n += 5 * K  # per-leaf fused updates
@@ -92,9 +107,10 @@ def round_passes(algo: str, variant: str, K: int, *, arena: bool, multi_leaf: bo
         n += 1 + 3  # client mean (1r) + lam_s_new (2r+1w)
         return n
     n = 5 * K  # arena-wide fused updates; server row broadcasts in-kernel
-    if multi_leaf:
+    if multi_leaf and oracle == "boundary":
         # pytree gradient-oracle boundary: unpack x (1r+1w) + pack g (1r+1w)
-        # per inner step; zero for flat/single-leaf params (pure reshape)
+        # per inner step; an arena-native oracle (or a flat/single-leaf
+        # tree, where the boundary is a pure reshape) pays ZERO
         n += 4 * K
     n += 4  # fused round_tail, uplink-only (lam_is skipped off-trace): 3r + 1w
     if variant == "ef21":
@@ -107,7 +123,27 @@ def round_passes(algo: str, variant: str, K: int, *, arena: bool, multi_leaf: bo
     return n
 
 
+def _record(problem, algo, variant, path, oracle, driver, m, n, K, us, passes):
+    state_bytes = m * n * 4
+    eff_gbps = passes * state_bytes / (us * 1e-6) / 1e9
+    emit(f"round_{problem}_{algo}_{variant}_{path}_{oracle}_{driver}", us,
+         f"passes={passes},effective_GBps={eff_gbps:.2f}")
+    return {
+        "problem": problem, "algo": algo, "variant": variant, "path": path,
+        "oracle": oracle, "driver": driver,
+        "m": m, "n_params": n, "K": K,
+        "us_per_round": round(us, 1),
+        "hbm_passes": passes,
+        "state_bytes": state_bytes,
+        "effective_GBps": round(eff_gbps, 2),
+    }
+
+
 def bench_round(problem: str, algo: str, variant: str, K: int = 4):
+    # fresh compilation caches per cell: accumulated executables and live
+    # buffers from earlier cells otherwise skew the later timings by 2x+
+    # (recompilation happens inside time_fn's warmup, not the timed iters)
+    jax.clear_caches()
     spec = PROBLEMS[problem]
     m = spec["m"]
     params = _params(spec["shapes"])
@@ -115,29 +151,42 @@ def bench_round(problem: str, algo: str, variant: str, K: int = 4):
     n = sum(int(jnp.size(v)) for v in params.values())
     batch = {"dummy": jnp.zeros((m, 1))}
     records = []
-    for arena in [False, True]:
+
+    # (path, oracle) cells: the pytree path has no arena boundary; on the
+    # arena the native oracle is the new hot path, and lm_tree keeps a
+    # "boundary" record to show what the unpack/pack wrapper still costs
+    cells = [(False, "tree"), (True, "native")]
+    if multi_leaf:
+        cells.append((True, "boundary"))
+    for arena, oracle in cells:
         cfg = FederatedConfig(algorithm=algo, inner_steps=K, eta=0.1,
                               use_arena=arena, **VARIANTS[variant])
         opt = make(cfg)
         state = opt.init(params, m)
+        grad = ORACLES[oracle]
 
-        fn = jax.jit(lambda s: opt.round(s, _grad_fn, batch)[0])
+        fn = jax.jit(lambda s: opt.round(s, grad, batch)[0])
         us = time_fn(fn, state)
-        passes = round_passes(algo, variant, K, arena=arena, multi_leaf=multi_leaf)
-        state_bytes = m * n * 4
-        eff_gbps = passes * state_bytes / (us * 1e-6) / 1e9
+        passes = round_passes(algo, variant, K, arena=arena,
+                              multi_leaf=multi_leaf, oracle=oracle)
         path = "arena" if arena else "pytree"
-        records.append({
-            "problem": problem, "algo": algo, "variant": variant, "path": path,
-            "m": m, "n_params": n, "K": K,
-            "us_per_round": round(us, 1),
-            "hbm_passes": passes,
-            "state_bytes": state_bytes,
-            "effective_GBps": round(eff_gbps, 2),
-        })
-        emit(f"round_{problem}_{algo}_{variant}_{path}", us,
-             f"passes={passes},effective_GBps={eff_gbps:.2f}")
-    pyt, arn = records
+        records.append(_record(problem, algo, variant, path, oracle,
+                               "per_round", m, n, K, us, passes))
+
+        if variant == "plain" and algo == "gpdmm":
+            # round-batched scan driver: R rounds per dispatch, reported as
+            # the per-round share -- isolates what dispatch overhead costs
+            scan = make_scan_rounds(opt, grad)
+            batches = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (SCAN_R,) + x.shape), batch)
+            sfn = jax.jit(lambda s, b: scan(s, b)[0])
+            us_scan = time_fn(sfn, state, batches) / SCAN_R
+            records.append(_record(problem, algo, variant, path, oracle,
+                                   f"scan{SCAN_R}", m, n, K, us_scan, passes))
+
+    pyt = next(r for r in records if r["path"] == "pytree" and r["driver"] == "per_round")
+    arn = next(r for r in records if r["path"] == "arena" and r["oracle"] == "native"
+               and r["driver"] == "per_round")
     dp = (pyt["hbm_passes"] - arn["hbm_passes"]) / pyt["hbm_passes"]
     print(f"  -> {problem}/{algo}/{variant}: passes {pyt['hbm_passes']} -> "
           f"{arn['hbm_passes']} ({dp:+.0%}), time {pyt['us_per_round']:.0f} -> "
@@ -154,10 +203,14 @@ def run(out_path: str = "BENCH_round.json"):
     payload = {
         "bench": "round_bench",
         "note": "hbm_passes are analytic full-(m,N) elementwise passes per "
-                "round (grad math excluded, identical on both paths); "
-                "effective_GBps = passes * state_bytes / wall_time.  The "
-                "lm_tree rows include the pytree gradient-oracle boundary "
-                "(+4 passes/step) the arena pays for multi-leaf trees.",
+                "round (grad math excluded, identical on all paths); "
+                "effective_GBps = passes * state_bytes / wall_time.  oracle: "
+                "tree = per-leaf pytree grad, boundary = arena via the "
+                "unpack/pack wrapper (+4 passes/step on multi-leaf trees), "
+                "native = arena-native grad oracle (0 boundary passes).  "
+                "driver: per_round = one dispatch per round, scan8 = 8 "
+                "rounds per lax.scan dispatch (us_per_round is the "
+                "per-round share).",
         "trajectory": trajectory,
     }
     pathlib.Path(out_path).write_text(json.dumps(payload, indent=2))
@@ -166,4 +219,7 @@ def run(out_path: str = "BENCH_round.json"):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_round.json")
+    args = ap.parse_args()
+    run(args.out)

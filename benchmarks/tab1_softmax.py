@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_fn
 from repro.configs.base import FederatedConfig
 from repro.core import make
+from repro.core.softmax import SoftmaxRegression
 from repro.data import partition, synthetic
 
 BATCH = 300
@@ -22,25 +23,15 @@ ETA = 0.05
 ROUNDS = 60
 METHODS = ["fedavg", "gpdmm", "agpdmm", "scaffold"]
 
-
-def softmax_loss(w, batch):
-    """w: (784*10 + 10,) flat; batch: {"x": (B,784), "y": (B,)}."""
-    W = w[:7840].reshape(784, 10)
-    b = w[7840:]
-    logits = batch["x"] @ W + b
-    logp = jax.nn.log_softmax(logits)
-    onehot = jax.nn.one_hot(batch["y"], 10)
-    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
-
-
-grad_fn = jax.grad(softmax_loss)
+# the built-in objective (core.softmax); its oracle() carries the
+# arena-native gradient, so the arena rounds skip the per-step
+# unpack->grad->pack boundary entirely
+PROB = SoftmaxRegression(n_features=784, n_classes=10)
+grad_fn = PROB.oracle()
 
 
 def accuracy(w, x, y):
-    W = w[:7840].reshape(784, 10)
-    b = w[7840:]
-    pred = jnp.argmax(x @ W + b, axis=-1)
-    return float(jnp.mean((pred == y).astype(jnp.float32)))
+    return float(PROB.accuracy(w, x, y))
 
 
 def make_round_batches(xs, ys, K, r):
@@ -64,7 +55,7 @@ def run(rounds=ROUNDS, ks=(1, 5, 10, 30, 40)):
     xs, ys = partition.by_class(ds.x_train, ds.y_train, 10)  # (10, n, 784)
     xs = xs / 10.0  # feature scale ~ MNIST pixel scale
     xv, yv = ds.x_val / 10.0, ds.y_val
-    w0 = jnp.zeros((7850,))
+    w0 = PROB.init_params()
     table = {}
     for K in ks:
         for method in METHODS:

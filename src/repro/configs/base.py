@@ -85,6 +85,11 @@ class FederatedConfig:
     # x_s) for ALL i from what it holds -- so the KKT invariant (25) survives
     # partial rounds exactly.  1.0 = every client every round (paper-faithful).
     participation: float = 1.0
+    # Seed for the participation RNG (folded with the round counter).  One
+    # config field instead of a constant duplicated per algorithm, so two
+    # algorithms under comparison draw IDENTICAL mask sequences by contract
+    # when given the same seed.
+    seed: int = 17
     # Run the round's elementwise hot path over the flat client-state arena
     # (core.arena): all leaves of a client packed into one contiguous
     # 128-lane-padded row, so the K inner steps and the round tail are a
@@ -94,7 +99,21 @@ class FederatedConfig:
     # layout="fsdp" (per-leaf parameter shardings must be preserved) and for
     # mixed-dtype trees (one buffer would promote all client state to the
     # widest leaf dtype).
-    use_arena: bool = True
+    #
+    # "auto" (the default) additionally falls back when the packed width is
+    # below ``arena_min_width`` -- BENCH_round.json shows the pytree path
+    # winning at the paper's tiny shapes, where per-round pack/dispatch
+    # overhead swamps the fused-kernel savings.  True forces the arena,
+    # False forces the pytree path; every round records the decision in its
+    # metrics (``used_arena``).
+    use_arena: bool | str = "auto"
+    arena_min_width: int = 1024
+    # Rounds executed inside ONE jitted call: the launcher wraps
+    # ``fed.round`` in a ``lax.scan`` over a leading R dim of the batch
+    # stream with the state donated in place (metrics come back stacked),
+    # amortising the per-round dispatch overhead that dominates wall time at
+    # small state sizes.  1 = one dispatch per round (previous behaviour).
+    rounds_per_call: int = 1
     # beyond-paper: SVRG-style variance reduction for the stochastic setting
     # the paper names as future work (SSVII), following [14]'s PDMM+SVRG for
     # P2P.  "svrg" corrects each per-step minibatch gradient with the

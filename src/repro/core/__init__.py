@@ -7,12 +7,17 @@ baselines, all as model-agnostic pytree transformations.
     state = fed.init(params, m)
     state, metrics = fed.round(state, grad_fn, batch)
 """
-from repro.core.api import FedOpt, make, resolved_rho
-from repro.core import agpdmm, fedavg, fedsplit, gpdmm, pdmm, quadratic, scaffold, theory, tree_util
+from repro.core.api import FedOpt, make, make_oracle, make_scan_rounds, resolved_rho
+from repro.core import (
+    agpdmm, fedavg, fedsplit, gpdmm, pdmm, quadratic, scaffold, softmax, theory,
+    tree_util,
+)
 
 __all__ = [
     "FedOpt",
     "make",
+    "make_oracle",
+    "make_scan_rounds",
     "resolved_rho",
     "agpdmm",
     "fedavg",
@@ -21,6 +26,7 @@ __all__ = [
     "pdmm",
     "quadratic",
     "scaffold",
+    "softmax",
     "theory",
     "tree_util",
 ]

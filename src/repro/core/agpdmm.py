@@ -29,6 +29,7 @@ from repro.core import tree_util as T
 from repro.core.api import FedOpt, resolved_rho
 from repro.core.gpdmm import (
     _use_arena, arena_metrics, arena_tail, inner_steps, inner_steps_arena,
+    participation_key,
 )
 from repro.kernels import ops
 
@@ -83,7 +84,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
         uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
     if cfg.participation < 1.0:  # beyond-paper: async PDMM (partial rounds)
         mask = T.participation_mask(
-            jax.random.fold_in(jax.random.key(17), state["round"]), m, cfg.participation
+            participation_key(cfg, state["round"]), m, cfg.participation
         )
         uplink = T.tree_select(mask, uplink, state["u_hat"])
     if cfg.uplink_bits is not None or cfg.participation < 1.0:
@@ -97,6 +98,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     metrics = {
         "lam_sum_norm": T.tree_norm(T.tree_client_sum(lam_s_new)),
         "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        "used_arena": jnp.zeros((), jnp.float32),
     }
     return new_state, metrics
 

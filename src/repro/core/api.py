@@ -39,6 +39,62 @@ class FedOpt(NamedTuple):
     server_params: Callable  # (state) -> params  (current global estimate)
 
 
+# ---------------------------------------------------------------------------
+# gradient-oracle protocol (arena-native fast paths)
+# ---------------------------------------------------------------------------
+#
+# A plain ``grad_fn(params_i, batch_i) -> grad`` works everywhere; the arena
+# hot path additionally recognises two OPTIONAL attributes on the callable:
+#
+#   grad_fn.grad_arena(spec)          -> ga(x_arena, batch) -> g_arena
+#       Stacked gradient evaluated DIRECTLY on the packed ``(m, width)``
+#       buffer via the spec's slice table.  Padding columns must map to 0.
+#       Removes the per-inner-step unpack -> vgrad -> pack boundary round
+#       trip (+4 full-state HBM passes/step for multi-leaf trees).
+#
+#   grad_fn.affine_arena(spec, batch) -> (H, c)   with H (m, W, W), c (m, W)
+#       Declares the gradient affine: grad_i(x) = H_i x - c_i in arena
+#       coordinates (rows/cols beyond each leaf's size must be zero so the
+#       padding invariant survives).  Lets the round run the WHOLE K-step
+#       inner loop as one fused kernel (``kernels/inner_loop.py``) that
+#       keeps the client row in VMEM across all K steps.
+#
+# ``make_oracle`` assembles such an annotated callable; ``arena_grad``
+# resolves the best available stacked arena gradient for any grad_fn.
+
+
+def make_oracle(grad_fn, *, grad_arena=None, affine_arena=None):
+    """Annotate a per-client ``grad_fn`` with arena-native fast paths."""
+
+    def oracle(x, batch):
+        return grad_fn(x, batch)
+
+    if grad_arena is not None:
+        oracle.grad_arena = grad_arena
+    if affine_arena is not None:
+        oracle.affine_arena = affine_arena
+    return oracle
+
+
+def arena_grad(grad_fn, spec):
+    """Resolve the stacked arena-space gradient for ``grad_fn``.
+
+    Returns ``(ga, native)`` where ``ga((m, width), batch) -> (m, width)``.
+    Oracles advertising ``grad_arena`` run entirely in arena space (0 extra
+    full-state passes); plain grads are vmapped through the pytree boundary
+    (unpack x + pack g: +4 passes per step for multi-leaf trees).
+    """
+    factory = getattr(grad_fn, "grad_arena", None)
+    if factory is not None:
+        return factory(spec), True
+    vgrad = jax.vmap(grad_fn)
+
+    def ga(xa, b):
+        return spec.pack_stacked(vgrad(spec.unpack_stacked(xa), b))
+
+    return ga, False
+
+
 def resolved_rho(cfg: FederatedConfig) -> float:
     """The paper's default rho = 1/(K * eta) (matched to SCAFFOLD's scaling)."""
     return cfg.rho if cfg.rho is not None else 1.0 / (cfg.inner_steps * cfg.eta)
@@ -49,6 +105,28 @@ def client_batches(batch, k: int, per_step: bool):
     if not per_step:
         return batch
     return jax.tree.map(lambda x: x[k], batch)
+
+
+def make_scan_rounds(fed: FedOpt, grad_fn, per_step_batches: bool = False):
+    """Round-batched driver: returns ``run(state, batches) -> (state, metrics)``
+    executing R full rounds inside ONE ``lax.scan`` (batch leaves carry a
+    leading R dim; metrics come back stacked ``(R, ...)``).
+
+    One jitted dispatch amortises the per-round launch overhead that
+    dominates at small state sizes; with the state donated, XLA keeps the
+    arena buffers in place across all R rounds.  State-identical to R
+    separate ``fed.round`` calls (``tests/test_inner_loop.py``) -- the
+    participation RNG is folded from the carried round counter, so masks
+    match the loop-of-rounds schedule exactly.
+    """
+
+    def run(state, batches):
+        def body(s, b):
+            return fed.round(s, grad_fn, b, per_step_batches)
+
+        return jax.lax.scan(body, state, batches)
+
+    return run
 
 
 def make(cfg: FederatedConfig) -> FedOpt:

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, resolved_rho
+from repro.core.api import FedOpt, arena_grad, resolved_rho
 from repro.core.gpdmm import _use_arena
 from repro.kernels import ops
 
@@ -77,14 +77,16 @@ def make_exact(cfg: FederatedConfig) -> FedOpt:
 def _round_inexact_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     """Inexact FedSplit over the flat arena: the K gradient steps and the
     reflect/average/reflect tail run on one (m, width) buffer per state
-    tensor instead of per-leaf tree.map chains."""
+    tensor instead of per-leaf tree.map chains.  The gradient resolves via
+    the ``core.api`` oracle protocol -- arena-native oracles evaluate on the
+    packed buffer directly (0 boundary passes per step)."""
     gamma = _gamma(cfg)
     K, eta = cfg.inner_steps, cfg.eta
     spec = arena.ArenaSpec.from_tree(state["x_s"])
     z = state["z_s"]  # arena-resident (m, width)
     m = z.shape[0]
     x_s_row = spec.pack(state["x_s"])
-    vgrad = jax.vmap(grad_fn)
+    grad_a, _native = arena_grad(grad_fn, spec)
 
     if cfg.fedsplit_init == "z":
         x0 = z  # the paper's diagnosed improper init
@@ -95,7 +97,7 @@ def _round_inexact_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_b
 
     def one_step(x, xs_k):
         b = xs_k if per_step_batches else batch
-        g = spec.pack_stacked(vgrad(spec.unpack_stacked(x), b))
+        g = grad_a(x, b)
         # grad h = grad f + (x - z)/gamma: lam-free fused step, rho = 1/gamma
         return ops.fused_update(x, g, z, None, eta, 1.0 / gamma), None
 
@@ -113,7 +115,8 @@ def _round_inexact_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_b
         "round": state["round"] + 1,
     }
     drift = jnp.sum(jnp.square((x_K - x_s_row[None]).astype(jnp.float32)), axis=1)
-    return new_state, {"client_drift": jnp.mean(drift)}
+    return new_state, {"client_drift": jnp.mean(drift),
+                       "used_arena": jnp.ones((), jnp.float32)}
 
 
 def _round_inexact(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
@@ -151,7 +154,10 @@ def _round_inexact(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches
     x_s_new = T.tree_client_mean(z_is)
     z_s_new = T.tmap(lambda s, z: 2.0 * s - z, T.tree_broadcast(x_s_new, m), z_is)
     new_state = {"x_s": x_s_new, "z_s": z_s_new, "round": state["round"] + 1}
-    metrics = {"client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, T.tree_broadcast(x_s, m))))}
+    metrics = {
+        "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, T.tree_broadcast(x_s, m)))),
+        "used_arena": jnp.zeros((), jnp.float32),
+    }
     return new_state, metrics
 
 

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, resolved_rho
+from repro.core.api import FedOpt, arena_grad, resolved_rho
 from repro.kernels import ops
 
 
@@ -41,11 +41,19 @@ def _use_arena(cfg: FederatedConfig, params=None) -> bool:
     # weights + f32 norms) also fall back: the single arena buffer would
     # promote everything to the widest dtype -- 2x the client-state HBM and
     # a numerical divergence from the per-leaf path.
-    if not cfg.use_arena or cfg.layout == "fsdp":
+    if cfg.use_arena is False or cfg.layout == "fsdp":
         return False
     if params is not None:
         if len({leaf.dtype for leaf in jax.tree.leaves(params)}) > 1:
             return False
+    if cfg.use_arena == "auto" and params is not None:
+        # below the width threshold the per-round pack/dispatch overhead
+        # outweighs the fused kernels (measured in BENCH_round.json: the
+        # paper-scale "small" shape loses on the arena, the LM-scale shapes
+        # win), so auto-dispatch keeps tiny problems on the pytree path.
+        # The decision is static (spec = shapes only) and recorded in round
+        # metrics as ``used_arena``.
+        return arena.ArenaSpec.from_tree(params).width >= cfg.arena_min_width
     return True
 
 
@@ -100,14 +108,29 @@ def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
 def inner_steps_arena(spec, grad_fn, x0, x_s_row, lam, batch, *, K, eta, rho,
                       per_step, vr_snapshot=None):
     """Arena counterpart of ``inner_steps``: client state carried as one
-    ``(m, width)`` buffer; each step is ONE fused-update kernel over the
-    packed buffer (the server row broadcasts in-kernel) plus the unavoidable
-    unpack->grad->pack round trip through the model's pytree."""
-    step_c = 1.0 / (1.0 / eta + rho)
-    vgrad = jax.vmap(grad_fn)
+    ``(m, width)`` buffer, end to end.
 
-    def grad_a(xa, b):
-        return spec.pack_stacked(vgrad(spec.unpack_stacked(xa), b))
+    Gradient oracle resolution (``core.api`` protocol), fastest first:
+
+      1. ``grad_fn.affine_arena`` + the width fits VMEM (and the plain
+         full-batch case): the WHOLE K-step loop is ONE fused kernel
+         (``kernels/inner_loop.py``) -- 1 HBM read + 1 write of the client
+         state for the entire inner loop.
+      2. ``grad_fn.grad_arena``: one fused-update kernel per step with the
+         gradient evaluated directly on the packed buffer -- 0 boundary
+         passes.
+      3. plain ``grad_fn``: same scan, paying the unpack->vgrad->pack
+         round trip through the model's pytree each step.
+    """
+    step_c = 1.0 / (1.0 / eta + rho)
+
+    affine = getattr(grad_fn, "affine_arena", None)
+    if (affine is not None and not per_step and vr_snapshot is None
+            and ops.affine_inner_fits(spec.width)):
+        H, c = affine(spec, batch)
+        return ops.inner_loop_affine(x0, H, c, x_s_row, lam, step_c, rho, K)
+
+    grad_a, _native = arena_grad(grad_fn, spec)
 
     gbar = None
     if vr_snapshot is not None:
@@ -132,6 +155,13 @@ def inner_steps_arena(spec, grad_fn, x0, x_s_row, lam, batch, *, K, eta, rho,
     return x_K, xsum * (1.0 / K)
 
 
+def participation_key(cfg: FederatedConfig, round_idx):
+    """The round's participation RNG key: folded from ``cfg.seed``, so every
+    algorithm under comparison draws the SAME mask sequence by contract (the
+    old hard-coded key(17) made that an accident of duplication)."""
+    return jax.random.fold_in(jax.random.key(cfg.seed), round_idx)
+
+
 def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
     """Shared GPDMM/AGPDMM arena round tail: fused EF21 quantise-delta,
     participation select, u_hat carry, the single client-mean all-reduce,
@@ -145,7 +175,7 @@ def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
         uplink = ops.ef21_update(uplink, u_hat, cfg.uplink_bits, spec.leaf_rows())
     if cfg.participation < 1.0:
         mask = T.participation_mask(
-            jax.random.fold_in(jax.random.key(17), state["round"]), m, cfg.participation
+            participation_key(cfg, state["round"]), m, cfg.participation
         )
         uplink = jnp.where(mask[:, None], uplink, u_hat)
     if u_hat is not None:
@@ -158,13 +188,16 @@ def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
 
 def arena_metrics(lam_s_new, x_K, x_s_row):
     """KKT-invariant and drift metrics straight off the arena buffers;
-    padding columns are identically zero, so no masking is needed."""
+    padding columns are identically zero, so no masking is needed.
+    ``used_arena`` records the (static) layout decision so benches can see
+    which path a round actually ran."""
     f32 = jnp.float32
     return {
         "lam_sum_norm": jnp.linalg.norm(jnp.sum(lam_s_new.astype(f32), axis=0)),
         "client_drift": jnp.mean(
             jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)
         ),
+        "used_arena": jnp.ones((), f32),
     }
 
 
@@ -241,7 +274,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
         uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
     if cfg.participation < 1.0:  # beyond-paper: async PDMM (partial rounds)
         mask = T.participation_mask(
-            jax.random.fold_in(jax.random.key(17), state["round"]), m, cfg.participation
+            participation_key(cfg, state["round"]), m, cfg.participation
         )
         # silent clients transmit nothing; the server keeps its cached view
         uplink = T.tree_select(mask, uplink, state["u_hat"])
@@ -262,6 +295,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
         # KKT invariant (25): sum_i lam_{s|i} == 0 identically
         "lam_sum_norm": T.tree_norm(T.tree_client_sum(lam_s_new)),
         "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        "used_arena": jnp.zeros((), jnp.float32),
     }
     if return_trace:  # quantities the convergence-theory checks need
         metrics["trace"] = {"x_ref": x_ref, "x_bar": x_bar, "lam_is": lam_is, "x_K": x_K}

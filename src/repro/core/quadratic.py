@@ -1,10 +1,18 @@
 """The paper's least-squares testbed (SSVI-A): f_i(x) = 1/2 ||A_i x - b_i||^2
-with A_i ~ N(0,1)^{n x d}, b_i = A_i y0 + v_i, v_i ~ N(0, 0.25 I).
+with A_i ~ N(0,1)^{n x d}, b_i = A_i y0 + v_i, v_i ~ N(0, 0.25 I) -- plus an
+optional ridge term reg/2 ||x||^2 per client (the gradient stays affine:
+grad f_i(x) = (A_i^T A_i + reg I) x - A_i^T b_i).
 
 Provides the gradient oracle (via precomputed A^T A, A^T b -- O(d^2) per
 step), the closed-form prox oracle for exact PDMM/FedSplit (via a per-client
 eigendecomposition, so prox is O(d^2) for any rho), the global optimum, and
 the smoothness/strong-convexity constants (L, mu) the theory bounds need.
+
+``oracle()`` returns the grad_fn annotated with the arena-native fast paths
+(``core.api`` oracle protocol): ``grad_arena`` evaluates on the packed
+``(m, width)`` buffer with zero boundary passes, and ``affine_arena``
+exposes the (H, c) affine structure the fused K-step inner-loop kernel
+(``kernels/inner_loop.py``) consumes.
 """
 from __future__ import annotations
 
@@ -14,6 +22,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.api import make_oracle
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,8 +35,9 @@ class LeastSquares:
     evecs: jax.Array  # (m, d, d)
     x_star: jax.Array  # (d,) global optimum
     f_star: jax.Array  # () optimal value of F = sum_i f_i
-    L: float  # max_i lambda_max(AtA_i)
-    mu: float  # min_i lambda_min(AtA_i)
+    L: float  # max_i lambda_max(AtA_i + reg I)
+    mu: float  # min_i lambda_min(AtA_i + reg I)
+    reg: float = 0.0  # per-client ridge weight (0 = the paper's least squares)
 
     @property
     def m(self) -> int:
@@ -38,12 +49,45 @@ class LeastSquares:
 
     # -- oracles -----------------------------------------------------------
     def grad(self, x, client_batch):
-        """grad f_i(x) = AtA_i x - Atb_i; client_batch = {"AtA","Atb"}."""
-        return client_batch["AtA"] @ x - client_batch["Atb"]
+        """grad f_i(x) = (AtA_i + reg I) x - Atb_i; client_batch = {"AtA","Atb"}."""
+        return client_batch["AtA"] @ x - client_batch["Atb"] + self.reg * x
 
     def batch(self):
         """Stacked client batch for the federated round API."""
         return {"AtA": self.AtA, "Atb": self.Atb}
+
+    def oracle(self):
+        """``grad`` annotated with the arena-native fast paths (api protocol).
+
+        The parameter tree is a flat ``(d,)`` vector, so the arena row is
+        ``[x | 0-pad]`` and both fast paths are exact on the padding: the
+        affine H is zero outside the leading d x d block and c is
+        zero-padded, so padded coordinates stay identically zero.
+        """
+        reg = self.reg
+
+        def grad_arena(spec):
+            (e,) = spec.leaves  # single flat leaf at offset 0
+            d, w = e.size, spec.width
+
+            def ga(xa, cb):
+                x = xa[:, :d]
+                g = jnp.einsum("mde,me->md", cb["AtA"], x) - cb["Atb"] + reg * x
+                return jnp.pad(g, ((0, 0), (0, w - d))) if w != d else g
+
+            return ga
+
+        def affine_arena(spec, cb):
+            (e,) = spec.leaves
+            d, w = e.size, spec.width
+            H = cb["AtA"] + reg * jnp.eye(d, dtype=cb["AtA"].dtype)
+            c = cb["Atb"]
+            if w != d:
+                H = jnp.pad(H, ((0, 0), (0, w - d), (0, w - d)))
+                c = jnp.pad(c, ((0, 0), (0, w - d)))
+            return H, c
+
+        return make_oracle(self.grad, grad_arena=grad_arena, affine_arena=affine_arena)
 
     def prox_fn(self, i_free=True):
         """Returns prox(v, rho) usable under vmap over the client dim.
@@ -53,10 +97,13 @@ class LeastSquares:
         variant: ``prox_stacked(v_stacked, rho)`` mapped in the caller.
         """
 
+        reg = self.reg
+
         def prox_one(evals, evecs, Atb, v, rho):
-            # argmin 1/2||Ax-b||^2 + rho/2 ||x - v||^2
+            # argmin 1/2||Ax-b||^2 + reg/2||x||^2 + rho/2 ||x - v||^2
+            # (AtA + reg I shares AtA's eigenvectors: evals shift by reg)
             rhs = Atb + rho * v
-            return evecs @ ((evecs.T @ rhs) / (evals + rho))
+            return evecs @ ((evecs.T @ rhs) / (evals + reg + rho))
 
         return prox_one
 
@@ -64,12 +111,12 @@ class LeastSquares:
         """prox_fn(v_i, rho) for core.pdmm / core.fedsplit: the client index
         is implicit in vmap position, so we close over stacked arrays and let
         vmap slice them via lexical closure trick (see usage in tests)."""
-        ev, eV, Atb = self.evals, self.evecs, self.Atb
+        ev, eV, Atb, reg = self.evals, self.evecs, self.Atb, self.reg
 
         def stacked_prox(v_stacked, rho):
             def one(evals, evecs, atb, v):
                 rhs = atb + rho * v
-                return evecs @ ((evecs.T @ rhs) / (evals + rho))
+                return evecs @ ((evecs.T @ rhs) / (evals + reg + rho))
 
             return jax.vmap(one)(ev, eV, Atb, v_stacked)
 
@@ -80,7 +127,8 @@ class LeastSquares:
         """Global objective sum_i f_i(x) (x: (d,))."""
         quad = jnp.einsum("d,mde,e->", x, self.AtA, x)
         lin = jnp.einsum("md,d->", self.Atb, x)
-        return 0.5 * quad - lin + 0.5 * jnp.sum(self.btb)
+        ridge = 0.5 * self.reg * self.m * jnp.sum(jnp.square(x))
+        return 0.5 * quad - lin + 0.5 * jnp.sum(self.btb) + ridge
 
     def gap(self, x):
         return self.F(x) - self.f_star
@@ -93,7 +141,22 @@ class LeastSquares:
 
     def lam_star(self):
         """Optimal duals: lam*_{i|s} = grad f_i(x*) (KKT (7))."""
-        return jnp.einsum("mde,e->md", self.AtA, self.x_star) - self.Atb
+        return (jnp.einsum("mde,e->md", self.AtA, self.x_star) - self.Atb
+                + self.reg * self.x_star[None])
+
+    # -- variants ----------------------------------------------------------
+    def with_ridge(self, reg: float) -> "LeastSquares":
+        """Same data, ridge-regularised objective; recomputes the optimum
+        and the smoothness/strong-convexity constants for the new problem."""
+        H = self.AtA.sum(0) + self.m * reg * jnp.eye(self.d)
+        g = self.Atb.sum(0)
+        x_star = jnp.linalg.solve(H, g)
+        f_star = 0.5 * x_star @ H @ x_star - g @ x_star + 0.5 * self.btb.sum()
+        return dataclasses.replace(
+            self, reg=reg, x_star=x_star, f_star=f_star,
+            L=float(self.evals[:, -1].max()) + reg,
+            mu=float(self.evals[:, 0].min()) + reg,
+        )
 
 
 def generate(key, m: int, n: int, d: int, noise_std: float = 0.5) -> LeastSquares:

@@ -1,0 +1,100 @@
+"""Softmax regression -- the objective of the paper's Table I / Fig. 3
+experiments (one class per client, maximum heterogeneity); the 2-class case
+is logistic regression.
+
+Parameters follow the experiments' flat-vector convention: one ``(F*C + C,)``
+vector holding the row-major weight matrix ``W (F, C)`` followed by the bias
+``b (C,)``, so the same problem runs on every federated algorithm with a
+single-leaf parameter tree.
+
+``oracle()`` annotates the per-client grad with the arena-native fast path
+(``core.api`` protocol): the softmax cross-entropy gradient has the closed
+form
+
+    err = (softmax(x W + b) - onehot(y)) / B
+    gW  = x^T err,   gb = sum_b err
+
+so ``grad_arena`` evaluates it directly on the packed ``(m, width)`` buffer
+-- slicing W and b out of each row via the spec's slice table and writing one
+packed gradient buffer back.  Zero unpack/pack boundary passes per inner
+step (the gradient is NOT affine in w, so the fused K-step kernel does not
+apply -- the scan path with this oracle is the hot path here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import make_oracle
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxRegression:
+    n_features: int = 784
+    n_classes: int = 10
+
+    @property
+    def dim(self) -> int:
+        return self.n_features * self.n_classes + self.n_classes
+
+    # -- flat-vector layout -------------------------------------------------
+    def unravel(self, w):
+        F, C = self.n_features, self.n_classes
+        return w[: F * C].reshape(F, C), w[F * C :]
+
+    def init_params(self):
+        return jnp.zeros((self.dim,), jnp.float32)
+
+    # -- objective ----------------------------------------------------------
+    def loss(self, w, batch):
+        """Mean cross-entropy; batch = {"x": (B, F), "y": (B,) int labels}."""
+        W, b = self.unravel(w)
+        logp = jax.nn.log_softmax(batch["x"] @ W + b)
+        onehot = jax.nn.one_hot(batch["y"], self.n_classes)
+        return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+    def accuracy(self, w, x, y):
+        W, b = self.unravel(w)
+        pred = jnp.argmax(x @ W + b, axis=-1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    # -- gradient oracles ----------------------------------------------------
+    def _err(self, W, b, batch):
+        """(softmax(xW + b) - onehot(y)) / B -- the shared residual."""
+        p = jax.nn.softmax(batch["x"] @ W + b)
+        onehot = jax.nn.one_hot(batch["y"], self.n_classes)
+        return (p - onehot) / batch["y"].shape[-1]
+
+    def grad(self, w, batch):
+        """Closed-form grad of ``loss`` (== jax.grad(loss), tested)."""
+        W, b = self.unravel(w)
+        err = self._err(W, b, batch)
+        gW = batch["x"].T @ err
+        return jnp.concatenate([gW.reshape(-1), jnp.sum(err, axis=0)])
+
+    def oracle(self):
+        F, C = self.n_features, self.n_classes
+
+        def grad_arena(spec):
+            (e,) = spec.leaves  # the flat (F*C + C,) leaf at offset 0
+            assert e.size == self.dim, (e.size, self.dim)
+            w = spec.width
+
+            def ga(xa, batch):
+                # xa: (m, width); batch leaves (m, B, ...)
+                W = xa[:, : F * C].reshape(xa.shape[0], F, C)
+                b = xa[:, F * C : F * C + C]
+                p = jax.nn.softmax(jnp.einsum("mbf,mfc->mbc", batch["x"], W) + b[:, None])
+                onehot = jax.nn.one_hot(batch["y"], C)
+                err = (p - onehot) / batch["y"].shape[-1]
+                gW = jnp.einsum("mbf,mbc->mfc", batch["x"], err)
+                g = jnp.concatenate(
+                    [gW.reshape(xa.shape[0], F * C), jnp.sum(err, axis=1)], axis=-1
+                )
+                return jnp.pad(g, ((0, 0), (0, w - self.dim))) if w != self.dim else g
+
+            return ga
+
+        return make_oracle(self.grad, grad_arena=grad_arena)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: the WHOLE K-step eq. (20) inner loop for affine
+gradient oracles, one client per grid step.
+
+For the quadratic testbed (least squares / ridge) the per-client gradient is
+affine in arena coordinates:
+
+    grad_i(x) = H_i x - c_i        (H_i = A_i^T A_i + reg I, c_i = A_i^T b_i)
+
+so the K inexact-PDMM steps
+
+    x <- x - step * ((H x - c) + rho * (x - x_s) + lam)        (eq. 20)
+
+form a closed recurrence over VMEM-resident data: the kernel loads one
+client's row block (x0, c, lam, the shared server row x_s) and its H matrix
+once, runs all K steps with a ``fori_loop`` carrying (x, sum_k x), and writes
+x_K and x_bar back.  That is ONE HBM read + ONE write of the client state for
+the whole inner loop, versus K round trips for the step-at-a-time path (and
+the matvec hits the MXU instead of re-streaming the state through the VPU K
+times).
+
+VMEM budget (``vmem_bytes``): the f32 working set of one grid step is the
+(W, W) H block plus ~8 row-sized (W,) buffers (x0/c/xs/lam in, x_K/x_bar
+out, 2 loop-carry rows), which must fit the shared ``VMEM_CAP_BYTES`` (8 MiB
+= half the ~16 MiB/core, leaving room for Pallas' double-buffered pipeline).
+That caps W at ~1400 lanes; ``fits_vmem`` is the static gate the round uses
+to fall back to the step-at-a-time scan for wider problems.
+
+Layout contract (``core.arena``): W % 128 == 0; H rows/cols and c entries
+beyond each leaf's true size are ZERO so the padding invariant survives
+(padded coordinates see g = 0 - 0 and rho * (0 - 0) + 0, staying 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_update import LANES, VMEM_CAP_BYTES, eq20
+
+
+def vmem_bytes(width: int) -> int:
+    """f32 working set of one client grid step: H (W x W) + ~8 rows."""
+    return 4 * (width * width + 8 * width)
+
+
+def fits_vmem(width: int) -> bool:
+    """Static gate: can the fused K-step kernel hold one client in VMEM?"""
+    return width % LANES == 0 and vmem_bytes(width) <= VMEM_CAP_BYTES
+
+
+def _kernel(x_ref, h_ref, c_ref, xs_ref, lam_ref, xk_ref, xb_ref, *,
+            K: int, step: float, rho: float):
+    f32 = jnp.float32
+    H = h_ref[0].astype(f32)  # (W, W), resident for all K steps
+    c = c_ref[...].astype(f32)  # (1, W)
+    xs = xs_ref[...].astype(f32)
+    lam = lam_ref[...].astype(f32)
+    x0 = x_ref[...].astype(f32)
+
+    def body(_, carry):
+        x, xsum = carry
+        # g_j = sum_e H[j, e] x[e]: contract x's lane dim with H's col dim
+        g = jax.lax.dot_general(
+            x, H, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=f32,
+        ) - c
+        x = eq20(x, g, xs, lam, step, rho)
+        return x, xsum + x
+
+    x_K, xsum = jax.lax.fori_loop(0, K, body, (x0, jnp.zeros_like(x0)))
+    xk_ref[...] = x_K.astype(xk_ref.dtype)
+    xb_ref[...] = (xsum * (1.0 / K)).astype(xb_ref.dtype)
+
+
+def inner_loop_affine_pallas(x0, H, c, x_s, lam, step, rho, K: int, *,
+                             interpret: bool = False):
+    """x0, c, lam: (m, W); H: (m, W, W); x_s: (W,) server row (broadcast
+    in-kernel).  Returns (x_K, x_bar), both (m, W)."""
+    m, w = x0.shape
+    assert w % LANES == 0, f"arena width {w} not a multiple of {LANES}"
+    assert H.shape == (m, w, w) and c.shape == (m, w) and lam.shape == (m, w), (
+        H.shape, c.shape, lam.shape)
+    assert fits_vmem(w), (
+        f"width={w}: fused K-step working set {vmem_bytes(w)} B exceeds the "
+        f"{VMEM_CAP_BYTES} B VMEM budget -- use the step-at-a-time path")
+    row_bs = pl.BlockSpec((1, w), lambda i: (i, 0))
+    out_sds = jax.ShapeDtypeStruct((m, w), x0.dtype)
+    x_K, x_bar = pl.pallas_call(
+        functools.partial(_kernel, K=int(K), step=float(step), rho=float(rho)),
+        grid=(m,),
+        in_specs=[
+            row_bs,
+            pl.BlockSpec((1, w, w), lambda i: (i, 0, 0)),
+            row_bs,
+            pl.BlockSpec((1, w), lambda i: (0, 0)),  # server row: every client
+            row_bs,
+        ],
+        out_specs=(row_bs, row_bs),
+        out_shape=(out_sds, out_sds),
+        interpret=interpret,
+    )(x0, H, c, x_s.reshape(1, w), lam)
+    return x_K, x_bar

@@ -287,6 +287,46 @@ def fused_update_arena(x, g, x_s, lam, step, rho, *, impl: Optional[str] = None,
     )
 
 
+def inner_loop_affine(x0, H, c, x_s, lam, step, rho, K: int, *,
+                      impl: Optional[str] = None):
+    """The WHOLE K-step eq. (20) inner loop for affine gradient oracles
+    (grad_i(x) = H_i x - c_i in arena coordinates): one kernel keeps each
+    client's row block + H in VMEM across all K steps -- 1 HBM read + 1
+    write of the client state for the whole loop instead of K round trips.
+
+    x0, c, lam: (m, W); H: (m, W, W); x_s: (W,).  Returns (x_K, x_bar).
+    Callers must gate on ``affine_inner_fits(W)`` (the VMEM budget).
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        f32 = jnp.float32
+        x_s_b = x_s.astype(f32)[None]
+        lam_f = lam.astype(f32)
+        Hf, cf = H.astype(f32), c.astype(f32)
+
+        def body(carry, _):
+            x, xsum = carry
+            g = jnp.einsum("mij,mj->mi", Hf, x) - cf
+            x = x - step * (g + rho * (x - x_s_b) + lam_f)
+            return (x, xsum + x), None
+
+        init = (x0.astype(f32), jnp.zeros_like(x0, f32))
+        (x_K, xsum), _ = jax.lax.scan(body, init, None, length=K)
+        return x_K.astype(x0.dtype), (xsum * (1.0 / K)).astype(x0.dtype)
+    from repro.kernels import inner_loop as il
+
+    return il.inner_loop_affine_pallas(
+        x0, H, c, x_s, lam, step, rho, K, interpret=(impl == "pallas_interpret")
+    )
+
+
+def affine_inner_fits(width: int) -> bool:
+    """Static VMEM gate for ``inner_loop_affine`` (see ``inner_loop.vmem_bytes``)."""
+    from repro.kernels import inner_loop as il
+
+    return il.fits_vmem(width)
+
+
 def round_tail(x_ref, lam_s, x_s, rho, *, with_lam_is: bool = True,
                impl: Optional[str] = None, block: Optional[int] = None):
     """Fused dual flip + uplink (eqs. 23/24 + Alg. 1 line 8):

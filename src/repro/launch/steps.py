@@ -23,6 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import sharding as sh
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import make as make_fed
+from repro.core import make_scan_rounds as make_fed_scan
 from repro.models import build as build_model
 
 
@@ -47,11 +48,15 @@ def num_clients(cfg: ArchConfig, mesh) -> int:
     return sh.axis_size(mesh, sh.client_axes(mesh))
 
 
-def batch_struct(cfg: ArchConfig, shape: ShapeConfig, *, stacked_m: Optional[int]):
-    """ShapeDtypeStructs for one batch (training: leading client dim m)."""
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig, *, stacked_m: Optional[int],
+                 rounds: Optional[int] = None):
+    """ShapeDtypeStructs for one batch (training: leading client dim m;
+    ``rounds=R`` prepends the round dim of the round-batched scan driver)."""
     S = shape.seq_len
     B = shape.global_batch if stacked_m is None else shape.global_batch // stacked_m
     lead = () if stacked_m is None else (stacked_m,)
+    if rounds is not None:
+        lead = (rounds,) + lead
     d: dict[str, Any] = {}
     if cfg.n_codebooks > 1:
         d["tokens"] = jax.ShapeDtypeStruct((*lead, B, cfg.n_codebooks, S), _tok_dtype())
@@ -108,9 +113,17 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
         def client_grad(params, client_batch):
             return jax.grad(lambda p: model.loss(p, client_batch)[0])(params)
 
-    def train_step(fed_state, batch):
-        new_state, metrics = fed.round(fed_state, client_grad, batch)
-        return new_state, metrics
+    R = cfg.fed.rounds_per_call
+    if R > 1:
+        # round-batched driver: R full rounds inside ONE jitted lax.scan
+        # with the (donated) state carried in place -- one dispatch instead
+        # of R, amortising per-round launch overhead.  Batch leaves carry a
+        # leading R dim; metrics come back stacked (R, ...).
+        train_step = make_fed_scan(fed, client_grad)
+    else:
+        def train_step(fed_state, batch):
+            new_state, metrics = fed.round(fed_state, client_grad, batch)
+            return new_state, metrics
 
     # shapes + shardings
     param_shapes = jax.eval_shape(model.init, jax.random.key(0))
@@ -137,8 +150,14 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
         return out
 
     st_shard = state_shardings(state_shapes)
-    b_struct = batch_struct(cfg, shape, stacked_m=m)
-    b_shard = sh.batch_shardings(mesh, b_struct, stacked=True, layout=layout)
+    b_struct = batch_struct(cfg, shape, stacked_m=m, rounds=R if R > 1 else None)
+    b_shard = sh.batch_shardings(
+        mesh, batch_struct(cfg, shape, stacked_m=m), stacked=True, layout=layout
+    )
+    if R > 1:  # round dim is scanned over, never sharded
+        b_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(None, *s.spec)), b_shard
+        )
 
     metrics_shapes = jax.eval_shape(train_step, state_shapes, b_struct)[1]
     out_shardings = (st_shard, jax.tree.map(lambda _: rep, metrics_shapes))
@@ -154,6 +173,7 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
             "layout": layout,
             "K": cfg.fed.inner_steps,
             "algorithm": cfg.fed.algorithm,
+            "rounds_per_call": R,
         },
         donate_argnums=(0,),  # fed_state is consumed each round
     )

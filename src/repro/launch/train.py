@@ -23,6 +23,7 @@ from repro import checkpoint as ckpt
 from repro.configs import get_arch
 from repro.configs.base import FederatedConfig, ShapeConfig
 from repro.core import make as make_fed
+from repro.core import make_scan_rounds
 from repro.data.synthetic import lm_batches
 from repro.launch.mesh import make_smoke_mesh
 from repro.launch.steps import build_train_step
@@ -45,6 +46,7 @@ def run(
     log_every: int = 5,
     uplink_bits: int | None = None,
     participation: float = 1.0,
+    rounds_per_call: int = 1,
 ):
     cfg = get_arch(arch)
     if reduced:
@@ -54,6 +56,7 @@ def run(
         fed=dataclasses.replace(
             cfg.fed, algorithm=algorithm, inner_steps=k, eta=eta, num_clients=m,
             layout="client_axis", uplink_bits=uplink_bits, participation=participation,
+            rounds_per_call=rounds_per_call,
         ),
     )
     model = build_model(cfg)
@@ -67,10 +70,20 @@ def run(
         return jax.grad(lambda q: model.loss(q, b)[0])(p)
 
     # donate the round state: the arena/round update aliases its input
-    # buffers in place instead of holding two copies of the (m, params) state
-    @partial(jax.jit, donate_argnums=(0,))
-    def step_fn(state, batch):
-        return fed.round(state, client_grad, batch)
+    # buffers in place instead of holding two copies of the (m, params) state.
+    # With rounds_per_call > 1 the scan driver runs R full rounds per
+    # dispatch over a leading-R batch stack (metrics come back stacked).
+    R = max(1, rounds_per_call)
+    if R > 1:
+        scan_rounds = make_scan_rounds(fed, client_grad)
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def step_fn(state, batches):
+            return scan_rounds(state, batches)
+    else:
+        @partial(jax.jit, donate_argnums=(0,))
+        def step_fn(state, batch):
+            return fed.round(state, client_grad, batch)
 
     @jax.jit
     def eval_loss(params, batch):
@@ -81,16 +94,56 @@ def run(
     history = []
     data = lm_batches(jax.random.key(seed + 1), steps, m, per_client_batch, seq_len, cfg.vocab_size)
     t0 = time.time()
-    for i, batch in enumerate(data):
-        state, metrics = step_fn(state, batch)
-        if i % log_every == 0 or i == steps - 1:
-            loss = float(eval_loss(fed.server_params(state), batch))
-            row = {"round": i, "server_loss": loss,
-                   **{kk: float(v) for kk, v in metrics.items() if kk != "trace"}}
+    def metrics_row(metrics):
+        # last-round values, whether stacked (R,) from the scan or scalars
+        return {kk: float(jnp.asarray(v).reshape(-1)[-1])
+                for kk, v in metrics.items() if kk != "trace"}
+
+    if R > 1:
+        # tail shorter than R (steps % R != 0) falls back to jitted,
+        # donated per-round dispatches -- same step semantics, no eager path
+        round_fn = jax.jit(
+            lambda s, b: fed.round(s, client_grad, b), donate_argnums=(0,))
+        pending = []
+        i = 0
+        last = metrics = None
+        for batch in data:
+            pending.append(batch)
+            last = batch
+            if len(pending) < R:
+                continue
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *pending)
+            pending = []
+            state, metrics = step_fn(state, stacked)  # metrics stacked (R,)
+            i += R
+            if (i - R) // max(1, log_every) != i // max(1, log_every):
+                row = {"round": i,
+                       "server_loss": float(eval_loss(fed.server_params(state), last)),
+                       **metrics_row(metrics)}
+                history.append(row)
+                print(f"[train] {json.dumps(row)}", flush=True)
+        for batch in pending:
+            state, metrics = round_fn(state, batch)
+            i += 1
+        if last is not None and (not history or history[-1]["round"] != i):
+            # always log the FINAL state (the R=1 path's i == steps-1 row)
+            row = {"round": i,
+                   "server_loss": float(eval_loss(fed.server_params(state), last)),
+                   **(metrics_row(metrics) if metrics is not None else {})}
             history.append(row)
             print(f"[train] {json.dumps(row)}", flush=True)
+    else:
+        for i, batch in enumerate(data):
+            state, metrics = step_fn(state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                loss = float(eval_loss(fed.server_params(state), batch))
+                row = {"round": i, "server_loss": loss,
+                       **{kk: float(v) for kk, v in metrics.items() if kk != "trace"}}
+                history.append(row)
+                print(f"[train] {json.dumps(row)}", flush=True)
     dt = time.time() - t0
-    print(f"[train] {steps} rounds (K={k}, m={m}) in {dt:.1f}s; algo={algorithm}")
+    print(f"[train] {steps} rounds (K={k}, m={m}) in {dt:.1f}s; algo={algorithm}, "
+          f"rounds_per_call={R}")
 
     if ckpt_dir:
         ckpt.save(ckpt_dir, steps, {"server": fed.server_params(state)})
@@ -116,12 +169,15 @@ def main():
                     help="EF21 delta-quantised uplink (beyond paper)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients active per round (async PDMM)")
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="rounds per jitted dispatch (lax.scan round batching)")
     args = ap.parse_args()
     run(
         args.arch, reduced=args.reduced, steps=args.steps, algorithm=args.algorithm,
         k=args.k, eta=args.eta, m=args.clients, per_client_batch=args.batch,
         seq_len=args.seq, ckpt_dir=args.ckpt_dir,
         uplink_bits=args.uplink_bits, participation=args.participation,
+        rounds_per_call=args.rounds_per_call,
     )
 
 

@@ -68,13 +68,16 @@ def test_q_functional_linear_decay(prob):
 
 
 def test_kkt_residuals_vanish(prob):
-    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=5, eta=0.5 / prob.L)
+    # use_arena=True (not the "auto" default, which keeps this paper-scale
+    # width on the pytree path): this test also guards the arena KKT maths
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=5, eta=0.5 / prob.L,
+                          use_arena=True)
     opt = make(cfg)
     s = opt.init(jnp.zeros((prob.d,)), prob.m)
     rf = jax.jit(lambda s: opt.round(s, prob.grad, prob.batch())[0])
     for _ in range(300):
         s = rf(s)
-    # lam_s is arena-resident (m, width) on the default path; unpack it
+    # lam_s is arena-resident (m, width) on this path; unpack it
     spec = arena.ArenaSpec.from_tree(s["x_s"])
     res = theory.kkt_residuals(prob, s["x_s"], spec.unpack_stacked(s["lam_s"]))
     assert float(res["dual_sum"]) < 1e-3
