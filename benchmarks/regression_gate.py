@@ -2,8 +2,10 @@
 
 Compares a fresh ``round_bench`` run against the committed
 ``BENCH_round.json`` baseline and FAILS (exit 1) if ``us_per_round`` for any
-gated cell -- (algo=gpdmm, variant=plain, path=arena), per problem shape /
-oracle / driver -- regresses more than ``--max-regress`` (default 20%).
+gated cell -- (algo in {gpdmm, scaffold}, variant=plain, path=arena), per
+problem shape / oracle / driver -- regresses more than ``--max-regress``
+(default 20%).  SCAFFOLD joined the gate with ISSUE 3: it is the paper's
+primary baseline, so its arena hot path is guarded exactly like GPDMM's.
 
 Hardware neutrality: the committed baseline was produced on a different
 machine than the CI runner, and absolute wall times swing with runner
@@ -16,9 +18,10 @@ reference path it must beat* trips the gate.  Cells without a sibling fall
 back to the absolute comparison.
 
 Records are matched on the full (problem, algo, variant, path, oracle,
-driver) key at the same K; cells present in only one file are reported but
-never fail the gate (so adding/removing shapes doesn't break CI -- the gate
-guards the HOT PATH's wall time, not the bench's schema).
+driver) key at the same K.  NEW cells (fresh-only) are reported but never
+fail the gate, so adding shapes doesn't break CI; a GATED baseline cell
+missing from the fresh run DOES fail -- otherwise dropping a hot path from
+the bench would silently disable its guard.
 
     PYTHONPATH=src:. python benchmarks/round_bench.py --out BENCH_round_fresh.json
     PYTHONPATH=src:. python benchmarks/regression_gate.py \
@@ -31,8 +34,15 @@ import json
 import pathlib
 import sys
 
-GATED = {"algo": "gpdmm", "variant": "plain", "path": "arena"}
+GATED = [
+    {"algo": "gpdmm", "variant": "plain", "path": "arena"},
+    {"algo": "scaffold", "variant": "plain", "path": "arena"},
+]
 KEY_FIELDS = ("problem", "algo", "variant", "path", "oracle", "driver", "K")
+
+
+def _is_gated(rec) -> bool:
+    return any(all(rec.get(k) == v for k, v in cell.items()) for cell in GATED)
 
 
 def _index(payload):
@@ -57,7 +67,7 @@ def gate(baseline_path: str, fresh_path: str, max_regress: float) -> int:
     fresh = _index(json.loads(pathlib.Path(fresh_path).read_text()))
     failures, checked = [], 0
     for key, rec in sorted(fresh.items()):
-        if any(rec.get(k) != v for k, v in GATED.items()):
+        if not _is_gated(rec):
             continue
         ref = base.get(key)
         if ref is None:
@@ -81,10 +91,14 @@ def gate(baseline_path: str, fresh_path: str, max_regress: float) -> int:
         if bad:
             failures.append(key)
     for key in sorted(set(base) - set(fresh)):
-        if all(base[key].get(k) == v for k, v in GATED.items()):
-            print(f"[gate] baseline cell missing from fresh run: {key}")
-    print(f"[gate] {checked} gated cells checked, {len(failures)} regression(s) "
-          f"(threshold +{max_regress:.0%})")
+        if _is_gated(base[key]):
+            # a vanished gated cell means the guard went inert (e.g. the
+            # bench dropped the algo): that FAILS -- otherwise removing the
+            # hot path from the bench would silently disable its gate
+            print(f"[gate] FAIL gated baseline cell missing from fresh run: {key}")
+            failures.append(key)
+    print(f"[gate] {checked} gated cells checked, {len(failures)} regression(s)/"
+          f"missing (threshold +{max_regress:.0%})")
     return 1 if failures else 0
 
 

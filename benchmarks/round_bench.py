@@ -1,7 +1,10 @@
 """Whole-round benchmark: per-leaf pytree path vs flat-arena + fused
 round-tail path (ISSUE 1 tentpole acceptance), extended with the ISSUE 2
-inner-loop rework: arena-native gradient oracles (0 boundary passes per
-step), and the round-batched ``lax.scan`` driver (one dispatch per R rounds).
+inner-loop rework (arena-native gradient oracles, 0 boundary passes per
+step; the round-batched ``lax.scan`` driver, one dispatch per R rounds) and
+the ISSUE 3 cross-algorithm rows: SCAFFOLD and FedAvg now run the same
+arena fast path, so every paper figure comparing them against GPDMM/AGPDMM
+measures the ALGORITHM, not a per-leaf-pytree implementation tax.
 
 The federated round is memory-bound elementwise math over the stacked
 ``(m, params)`` client state, so the figure of merit is full-state HBM
@@ -67,6 +70,18 @@ VARIANTS = {
     "partial": {"participation": 0.5},
 }
 
+# ISSUE 3: SCAFFOLD/FedAvg join the matrix so the paper's cross-algorithm
+# comparison is apples-to-apples on wall time.  SCAFFOLD has no EF21 variant
+# (two coupled uplink variables, core.scaffold rejects the combination).
+ALGO_VARIANTS = {
+    "gpdmm": ("plain", "ef21", "partial"),
+    "agpdmm": ("plain", "ef21", "partial"),
+    "scaffold": ("plain", "partial"),
+    "fedavg": ("plain", "ef21", "partial"),
+}
+
+# scan-driver records: one per gated algorithm (the arena hot paths CI guards)
+SCAN_ALGOS = ("gpdmm", "scaffold")
 SCAN_R = 8  # rounds per dispatch for the scan-driver records
 
 
@@ -90,10 +105,8 @@ _native_grad = make_oracle(_tree_grad, grad_arena=lambda spec: (lambda xa, b: 0.
 ORACLES = {"tree": _tree_grad, "boundary": _tree_grad, "native": _native_grad}
 
 
-def round_passes(algo: str, variant: str, K: int, *, arena: bool,
+def _passes_pdmm(algo: str, variant: str, K: int, *, arena: bool,
                  multi_leaf: bool, oracle: str) -> int:
-    """Full-(m, N) elementwise HBM passes per round (reads + writes), grad
-    math excluded (identical on all paths).  One fused_update = 4r + 1w."""
     if not arena:
         n = 1  # x_s broadcast to (m, N), materialised once per round
         n += 5 * K  # per-leaf fused updates
@@ -121,6 +134,68 @@ def round_passes(algo: str, variant: str, K: int, *, arena: bool,
             n += 3
     n += 1 + 3  # client mean + fused dual_from_uplink (2r+1w)
     return n
+
+
+def _passes_scaffold(variant: str, K: int, *, arena: bool, multi_leaf: bool,
+                     oracle: str) -> int:
+    if not arena:
+        n = 1 + 1  # x_s and c broadcasts, materialised once per round
+        n += 3  # lam = c_b - c_i (2r+1w)
+        n += 5 * K  # per-leaf fused updates (lam-carried, rho = 0)
+        n += 5  # c_i_new tmap over (c_i, c_b, x_s_b, x_K): 4r+1w
+        if variant == "partial":
+            n += 3 + 3  # select c_i_new + select x_up
+        n += 3 + 1  # dx: tree_sub (2r+1w) + client mean (1r)
+        n += 3 + 1  # dc: tree_sub + client mean
+        return n
+    n = 2  # lam = c - c_i materialised ONCE (1r+1w; server row in-kernel)
+    n += 5 * K  # arena-wide fused updates
+    if multi_leaf and oracle == "boundary":
+        n += 4 * K
+    n += 3  # fused scaffold_cv: 2r + 1w (both server rows broadcast in-kernel)
+    if variant == "partial":
+        n += 3 + 3  # where(c_i_new) + where(x_up)
+    n += 1  # x-mean (all-reduce #1)
+    n += 2  # dc mean over (c_i_new - c_i) (all-reduce #2)
+    return n
+
+
+def _passes_fedavg(variant: str, K: int, *, arena: bool, multi_leaf: bool,
+                   oracle: str) -> int:
+    if not arena:
+        n = 1  # x_s broadcast
+        n += 4 * K  # lam-free per-leaf fused updates
+        if variant == "ef21":
+            n += 3 + 3 + 3
+        if variant == "partial":
+            n += 3
+        n += 1  # client mean
+        return n
+    n = 4 * K  # lam-free arena-wide fused updates
+    if multi_leaf and oracle == "boundary":
+        n += 4 * K
+    if variant == "ef21":
+        n += 2 + 4
+    if variant == "partial":
+        n += 3
+    n += 1  # client mean
+    return n
+
+
+def round_passes(algo: str, variant: str, K: int, *, arena: bool,
+                 multi_leaf: bool, oracle: str) -> int:
+    """Full-(m, N) elementwise HBM passes per round (reads + writes), grad
+    math excluded (identical on all paths).  One fused eq.-(20) update =
+    4r + 1w with the dual operand, 3r + 1w without (SCAFFOLD/FedAvg)."""
+    if algo in ("gpdmm", "agpdmm"):
+        return _passes_pdmm(algo, variant, K, arena=arena,
+                            multi_leaf=multi_leaf, oracle=oracle)
+    if algo == "scaffold":
+        return _passes_scaffold(variant, K, arena=arena,
+                                multi_leaf=multi_leaf, oracle=oracle)
+    assert algo == "fedavg", algo
+    return _passes_fedavg(variant, K, arena=arena,
+                          multi_leaf=multi_leaf, oracle=oracle)
 
 
 def _record(problem, algo, variant, path, oracle, driver, m, n, K, us, passes):
@@ -173,7 +248,7 @@ def bench_round(problem: str, algo: str, variant: str, K: int = 4):
         records.append(_record(problem, algo, variant, path, oracle,
                                "per_round", m, n, K, us, passes))
 
-        if variant == "plain" and algo == "gpdmm":
+        if variant == "plain" and algo in SCAN_ALGOS:
             # round-batched scan driver: R rounds per dispatch, reported as
             # the per-round share -- isolates what dispatch overhead costs
             scan = make_scan_rounds(opt, grad)
@@ -197,8 +272,8 @@ def bench_round(problem: str, algo: str, variant: str, K: int = 4):
 def run(out_path: str = "BENCH_round.json"):
     trajectory = []
     for problem in PROBLEMS:
-        for algo in ["gpdmm", "agpdmm"]:
-            for variant in VARIANTS:
+        for algo, variants in ALGO_VARIANTS.items():
+            for variant in variants:
                 trajectory.extend(bench_round(problem, algo, variant))
     payload = {
         "bench": "round_bench",

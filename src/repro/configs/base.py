@@ -94,8 +94,12 @@ class FederatedConfig:
     # (core.arena): all leaves of a client packed into one contiguous
     # 128-lane-padded row, so the K inner steps and the round tail are a
     # handful of fused whole-buffer kernels instead of per-leaf tree.map
-    # chains.  Numerically equivalent (same f32 math, checked in
-    # tests/test_arena.py); automatically falls back to the pytree path for
+    # chains.  ALL five algorithms dispatch on this flag (GPDMM/AGPDMM/
+    # FedSplit since ISSUE 1-2; SCAFFOLD/FedAvg since ISSUE 3, so the
+    # paper's cross-algorithm benchmarks compare algorithms, not
+    # implementations).  Numerically equivalent (same f32 math, checked in
+    # tests/test_arena.py + tests/test_conformance.py); automatically falls
+    # back to the pytree path for
     # layout="fsdp" (per-leaf parameter shardings must be preserved) and for
     # mixed-dtype trees (one buffer would promote all client state to the
     # widest leaf dtype).

@@ -26,9 +26,9 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, resolved_rho
+from repro.core.api import FedOpt, resolved_rho, use_arena
 from repro.core.gpdmm import (
-    _use_arena, arena_metrics, arena_tail, inner_steps, inner_steps_arena,
+    arena_metrics, arena_tail, inner_steps, inner_steps_arena,
     participation_key,
 )
 from repro.kernels import ops
@@ -63,7 +63,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
 
 
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
-    if _use_arena(cfg, state["x_s"]):
+    if use_arena(cfg, state["x_s"]):
         return _round_arena(cfg, state, grad_fn, batch, per_step_batches)
     rho = resolved_rho(cfg)
     K = cfg.inner_steps
@@ -105,7 +105,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
 
 def make(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
-        if _use_arena(cfg, params):
+        if use_arena(cfg, params):
             spec = arena.ArenaSpec.from_tree(params)
             st = {
                 "x_s": params,

@@ -57,10 +57,17 @@ class FedOpt(NamedTuple):
 #       coordinates (rows/cols beyond each leaf's size must be zero so the
 #       padding invariant survives).  Lets the round run the WHOLE K-step
 #       inner loop as one fused kernel (``kernels/inner_loop.py``) that
-#       keeps the client row in VMEM across all K steps.
+#       keeps the client row in VMEM across all K steps.  Any AFFINE-OFFSET
+#       client correction (SCAFFOLD's ``grad f_i(x) - c_i + c``) stays on
+#       this path: the offset folds into the affine constant, so the
+#       consumer passes the arena-resident correction buffer straight to the
+#       kernel's per-client offset row (``inner_loop_affine(..., off=...)``)
+#       -- no extra (m, width) materialisation, no per-step re-read.
 #
 # ``make_oracle`` assembles such an annotated callable; ``arena_grad``
-# resolves the best available stacked arena gradient for any grad_fn.
+# resolves the best available stacked arena gradient for any grad_fn, and
+# ``affine_case`` gates the fused K-step kernel (shared by GPDMM/AGPDMM and
+# the SCAFFOLD/FedAvg offset variant).
 
 
 def make_oracle(grad_fn, *, grad_arena=None, affine_arena=None):
@@ -93,6 +100,53 @@ def arena_grad(grad_fn, spec):
         return spec.pack_stacked(vgrad(spec.unpack_stacked(xa), b))
 
     return ga, False
+
+
+def use_arena(cfg: FederatedConfig, params=None) -> bool:
+    """The shared layout-dispatch policy: does this (config, parameter tree)
+    run the round on the flat client-state arena?  Every algorithm consults
+    THIS function (it is cross-algorithm config/arena policy, not any one
+    optimiser's logic).
+
+    fsdp shards parameters per-leaf; packing would force a re-gather, so
+    that layout keeps the per-leaf pytree path.  Mixed-dtype trees (bf16
+    weights + f32 norms) also fall back: the single arena buffer would
+    promote everything to the widest dtype -- 2x the client-state HBM and a
+    numerical divergence from the per-leaf path.  ``use_arena="auto"``
+    additionally keeps packed widths below ``arena_min_width`` on the pytree
+    path: below the threshold the per-round pack/dispatch overhead outweighs
+    the fused kernels (measured in BENCH_round.json).  The decision is
+    static (spec = shapes only) and recorded in round metrics as
+    ``used_arena``.
+    """
+    if cfg.use_arena is False or cfg.layout == "fsdp":
+        return False
+    if params is not None:
+        if len({leaf.dtype for leaf in jax.tree.leaves(params)}) > 1:
+            return False
+    if cfg.use_arena == "auto" and params is not None:
+        from repro.core import arena
+
+        return arena.ArenaSpec.from_tree(params).width >= cfg.arena_min_width
+    return True
+
+
+def affine_case(grad_fn, spec, *, per_step=False, vr_snapshot=None):
+    """Gate the fused K-step affine kernel for ``grad_fn`` on ``spec``.
+
+    Returns the oracle's ``affine_arena`` factory when the whole inner loop
+    can run as ONE kernel -- the oracle declares the affine structure, the
+    batch is shared across steps (no per-step minibatches, no SVRG
+    correction), and one client's (W, W) H block fits the VMEM budget --
+    else None (callers fall back to the step-at-a-time scan).  Static:
+    decidable from shapes alone, so it costs nothing inside jit.
+    """
+    affine = getattr(grad_fn, "affine_arena", None)
+    if affine is None or per_step or vr_snapshot is not None:
+        return None
+    from repro.kernels import ops
+
+    return affine if ops.affine_inner_fits(spec.width) else None
 
 
 def resolved_rho(cfg: FederatedConfig) -> float:

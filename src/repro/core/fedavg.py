@@ -1,6 +1,15 @@
 """FedAvg (McMahan et al. 2017) -- the weakest baseline in the paper's
 experiments: plain local SGD + parameter averaging, no dual/control state, so
 it drifts under client heterogeneity when K > 1 (paper Fig. 2).
+
+Arena fast path (``core.arena``): the K local-SGD steps share SCAFFOLD's
+offset inner loop with the correction disabled -- affine oracles run the
+WHOLE loop as one fused K-step kernel (lam-free, rho = 0), arena-native
+oracles scan lam-free fused arena updates -- and the round tail is the
+single uplink mean.  Plain FedAvg carries NO per-client state; the EF21 /
+partial-participation variants add the arena-resident ``u_hat`` server view
+(same cache contract as GPDMM: silent clients' cached uplink is reused, the
+EF21 integrator accumulates quantised deltas), donated in place.
 """
 from __future__ import annotations
 
@@ -10,26 +19,74 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
+from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt
+from repro.core.api import FedOpt, use_arena
+from repro.core.gpdmm import participation_key
+from repro.core.scaffold import inner_steps_plain_arena
 from repro.kernels import ops
 
 
+def _num_clients(state, batch, per_step_batches):
+    """Plain FedAvg keeps no per-client state, so the client count comes
+    from the batch layout ((m, ...) or (K, m, ...)); the EF21/partial
+    variants carry u_hat and read m off it."""
+    u_hat = state.get("u_hat")
+    if u_hat is not None:
+        return jax.tree.leaves(u_hat)[0].shape[0]
+    b0 = jax.tree.leaves(batch)[0]
+    return b0.shape[1] if per_step_batches else b0.shape[0]
+
+
+def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    K, eta = cfg.inner_steps, cfg.eta
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    m = _num_clients(state, batch, per_step_batches)
+    x_s_row = spec.pack(state["x_s"])
+    x0 = jnp.broadcast_to(x_s_row[None], (m, spec.width))
+
+    x_K = inner_steps_plain_arena(
+        spec, grad_fn, x0, x_s_row, batch, K=K, eta=eta, per_step=per_step_batches,
+    )
+
+    uplink = x_K
+    new_state = {}
+    u_hat = state.get("u_hat")  # arena-resident (m, width) or absent
+    if cfg.uplink_bits is not None:  # fused EF21: 2 passes instead of ~4
+        uplink = ops.ef21_update(uplink, u_hat, cfg.uplink_bits, spec.leaf_rows())
+    if cfg.participation < 1.0:
+        mask = T.participation_mask(
+            participation_key(cfg, state["round"]), m, cfg.participation
+        )
+        # silent clients transmit nothing; the server keeps its cached view
+        uplink = jnp.where(mask[:, None], uplink, u_hat)
+    if u_hat is not None:
+        new_state["u_hat"] = uplink
+    x_s_new = jnp.mean(uplink, axis=0)  # <- the round's single all-reduce
+    new_state |= {"x_s": spec.unpack(x_s_new), "round": state["round"] + 1}
+    f32 = jnp.float32
+    metrics = {
+        "client_drift": jnp.mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        "used_arena": jnp.ones((), f32),
+    }
+    return new_state, metrics
+
+
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
+    if use_arena(cfg, state["x_s"]):
+        return _round_arena(cfg, state, grad_fn, batch, per_step_batches)
     K, eta = cfg.inner_steps, cfg.eta
     x_s = state["x_s"]
-    # FedAvg keeps no per-client state, so the client count comes from the
-    # batch layout: (m, ...) or (K, m, ...) with per-step batches.
-    b0 = jax.tree.leaves(batch)[0]
-    m = b0.shape[1] if per_step_batches else b0.shape[0]
+    m = _num_clients(state, batch, per_step_batches)
     x_s_b = T.tree_broadcast(x_s, m)
     vgrad = jax.vmap(grad_fn)
 
     def one_step(x, xs_k):
         b = xs_k if per_step_batches else batch
         g = vgrad(x, b)
-        zeros = T.tree_zeros_like(g)
-        x_new = T.tmap(lambda xx, gg, zz: ops.fused_update(xx, gg, xx, zz, eta, 0.0), x, g, zeros)
+        # plain SGD step: lam-free fused update with rho = 0 (xs unused)
+        x_new = T.tmap(lambda xx, gg: ops.fused_update(xx, gg, xx, None, eta, 0.0), x, g)
         return x_new, None
 
     if per_step_batches:
@@ -37,16 +94,42 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     else:
         x_K, _ = jax.lax.scan(one_step, x_s_b, None, length=K)
 
-    x_s_new = T.tree_client_mean(x_K)
-    new_state = {"x_s": x_s_new, "round": state["round"] + 1}
-    metrics = {"client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)))}
+    uplink = x_K
+    new_state = {}
+    if cfg.uplink_bits is not None:  # beyond-paper: EF21 delta-quantised uplink
+        uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
+    if cfg.participation < 1.0:
+        mask = T.participation_mask(
+            participation_key(cfg, state["round"]), m, cfg.participation
+        )
+        uplink = T.tree_select(mask, uplink, state["u_hat"])
+    if cfg.uplink_bits is not None or cfg.participation < 1.0:
+        new_state["u_hat"] = uplink  # the server's per-client view
+    x_s_new = T.tree_client_mean(uplink)
+    new_state |= {"x_s": x_s_new, "round": state["round"] + 1}
+    metrics = {
+        "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        "used_arena": jnp.zeros((), jnp.float32),
+    }
     return new_state, metrics
 
 
 def make(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
-        del m
-        return {"x_s": params, "round": jnp.zeros((), jnp.int32)}
+        needs_cache = cfg.uplink_bits is not None or cfg.participation < 1.0
+        if use_arena(cfg, params):
+            st = {"x_s": params, "round": jnp.zeros((), jnp.int32)}
+            if needs_cache:
+                spec = arena.ArenaSpec.from_tree(params)
+                row = spec.pack(params)
+                # server's cached per-client view: init == the round-0 uplink
+                # from a client that never moved
+                st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
+            return st
+        st = {"x_s": params, "round": jnp.zeros((), jnp.int32)}
+        if needs_cache:
+            st["u_hat"] = T.tree_broadcast(params, m)
+        return st
 
     return FedOpt(
         name="fedavg",

@@ -27,8 +27,7 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, arena_grad, resolved_rho
-from repro.core.gpdmm import _use_arena
+from repro.core.api import FedOpt, arena_grad, resolved_rho, use_arena
 from repro.kernels import ops
 
 
@@ -120,7 +119,7 @@ def _round_inexact_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_b
 
 
 def _round_inexact(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
-    if _use_arena(cfg, state["x_s"]):
+    if use_arena(cfg, state["x_s"]):
         return _round_inexact_arena(cfg, state, grad_fn, batch, per_step_batches)
     gamma = _gamma(cfg)
     K, eta = cfg.inner_steps, cfg.eta
@@ -163,7 +162,7 @@ def _round_inexact(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches
 
 def make_inexact(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
-        if _use_arena(cfg, params):
+        if use_arena(cfg, params):
             spec = arena.ArenaSpec.from_tree(params)
             row = spec.pack(params)
             return {

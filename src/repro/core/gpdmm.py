@@ -31,30 +31,8 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, arena_grad, resolved_rho
+from repro.core.api import FedOpt, affine_case, arena_grad, resolved_rho, use_arena
 from repro.kernels import ops
-
-
-def _use_arena(cfg: FederatedConfig, params=None) -> bool:
-    # fsdp shards parameters per-leaf; packing would force a re-gather, so
-    # that layout keeps the per-leaf pytree path.  Mixed-dtype trees (bf16
-    # weights + f32 norms) also fall back: the single arena buffer would
-    # promote everything to the widest dtype -- 2x the client-state HBM and
-    # a numerical divergence from the per-leaf path.
-    if cfg.use_arena is False or cfg.layout == "fsdp":
-        return False
-    if params is not None:
-        if len({leaf.dtype for leaf in jax.tree.leaves(params)}) > 1:
-            return False
-    if cfg.use_arena == "auto" and params is not None:
-        # below the width threshold the per-round pack/dispatch overhead
-        # outweighs the fused kernels (measured in BENCH_round.json: the
-        # paper-scale "small" shape loses on the arena, the LM-scale shapes
-        # win), so auto-dispatch keeps tiny problems on the pytree path.
-        # The decision is static (spec = shapes only) and recorded in round
-        # metrics as ``used_arena``.
-        return arena.ArenaSpec.from_tree(params).width >= cfg.arena_min_width
-    return True
 
 
 def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
@@ -124,9 +102,8 @@ def inner_steps_arena(spec, grad_fn, x0, x_s_row, lam, batch, *, K, eta, rho,
     """
     step_c = 1.0 / (1.0 / eta + rho)
 
-    affine = getattr(grad_fn, "affine_arena", None)
-    if (affine is not None and not per_step and vr_snapshot is None
-            and ops.affine_inner_fits(spec.width)):
+    affine = affine_case(grad_fn, spec, per_step=per_step, vr_snapshot=vr_snapshot)
+    if affine is not None:
         H, c = affine(spec, batch)
         return ops.inner_loop_affine(x0, H, c, x_s_row, lam, step_c, rho, K)
 
@@ -251,7 +228,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, 
 
 
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, return_trace=False):
-    if _use_arena(cfg, state["x_s"]):
+    if use_arena(cfg, state["x_s"]):
         return _round_arena(cfg, state, grad_fn, batch, per_step_batches, return_trace)
     rho = resolved_rho(cfg)
     K = cfg.inner_steps
@@ -304,7 +281,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
 
 def make(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
-        if _use_arena(cfg, params):
+        if use_arena(cfg, params):
             # arena-resident client state: one (m, width) buffer per stacked
             # tensor, donated in place round over round; x_s stays a pytree
             # (the public server-params contract)

@@ -8,6 +8,27 @@ client heterogeneity; both directions transmit TWO variables per round
     c_i^{r+1}   = c_i^r - c^r + (x_s^r - x_i^{r,K}) / (K eta)
     x_s^{r+1}   = x_s^r + eta_g mean_i (x_i^{r,K} - x_s^r)   (all-reduce #1)
     c^{r+1}     = c^r + mean_i (c_i^{r+1} - c_i^r)           (all-reduce #2)
+
+Arena fast path (``core.arena``): ``c_i`` is arena-RESIDENT -- it enters and
+leaves the round as one ``(m, width)`` buffer donated in place, exactly like
+GPDMM's ``lam_s``.  The K inner steps resolve through the ``core.api``
+oracle protocol: for affine oracles the control-variate correction
+``- c_i + c`` folds into the affine constant (``c`` into the fresh constant,
+``c_i`` as the kernel's per-client offset row), so the WHOLE inner loop
+stays the single fused K-step kernel with zero extra HBM materialisation;
+otherwise a scan of lam-carried fused arena updates runs with rho = 0.  The
+round tail is one fused control-variate kernel (``ops.scaffold_cv``) plus
+the TWO server all-reduces (x-mean and c-delta-mean) -- the two-variable
+communication pattern the paper contrasts with GPDMM's one.
+
+Partial participation (``cfg.participation < 1``, mask drawn from the
+``FederatedConfig.seed`` contract like every other algorithm): silent
+clients transmit NOTHING, so their deltas contribute zero to both server
+means and their c_i is kept -- the server-side invariant c = mean_i c_i
+survives partial rounds exactly.  EF21 uplink quantisation is NOT offered
+for SCAFFOLD: its uplink is two coupled variables per round and a single
+error-feedback integrator per client does not apply; ``make`` rejects the
+combination loudly.
 """
 from __future__ import annotations
 
@@ -17,12 +38,113 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
+from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt
+from repro.core.api import FedOpt, affine_case, arena_grad, use_arena
+from repro.core.gpdmm import participation_key
 from repro.kernels import ops
 
 
+def inner_steps_plain_arena(spec, grad_fn, x0, x_s_row, batch, *, K, eta,
+                            per_step, c_i=None, c_row=None):
+    """K plain gradient steps over the arena with an optional control-variate
+    correction:  x <- x - eta (grad f_i(x) - c_i + c).
+
+    Shared by SCAFFOLD (``c_i``/``c_row`` set) and FedAvg (no correction).
+    Resolution, fastest first (the ``core.api`` oracle protocol):
+
+      1. ``affine_arena`` + width fits VMEM: ONE fused K-step kernel.  The
+         server variate folds into the (freshly built) affine constant and
+         the arena-resident ``c_i`` buffer rides as the kernel's per-client
+         offset row -- the correction costs zero extra HBM traffic.
+      2. otherwise: a scan of lam-free (FedAvg) or lam-carried (SCAFFOLD,
+         lam = c - c_i materialised ONCE per round) fused arena updates with
+         rho = 0, the gradient via ``arena_grad`` (arena-native oracles pay
+         zero boundary passes).
+    """
+    affine = affine_case(grad_fn, spec, per_step=per_step)
+    if affine is not None:
+        H, c = affine(spec, batch)
+        off = None
+        if c_i is not None:
+            # grad - c_i + c == H x - ((c_aff - c) + c_i): server variate
+            # into the constant, client variate as the offset row
+            c = c - c_row[None]
+            off = c_i
+        x_K, _ = ops.inner_loop_affine(x0, H, c, x_s_row, None, eta, 0.0, K, off=off)
+        return x_K
+
+    grad_a, _native = arena_grad(grad_fn, spec)
+    lam = None if c_i is None else c_row[None] - c_i  # one (m, width) pass
+
+    def one_step(x, xs_k):
+        b = xs_k if per_step else batch
+        g = grad_a(x, b)
+        # eq. (20) with rho = 0: x - eta (g + lam), lam = c - c_i
+        return ops.fused_update_arena(x, g, x_s_row, lam, eta, 0.0), None
+
+    if per_step:
+        x_K, _ = jax.lax.scan(one_step, x0, batch)
+    else:
+        x_K, _ = jax.lax.scan(one_step, x0, None, length=K)
+    return x_K
+
+
+def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    """SCAFFOLD round over the flat arena: fused K-step inner loop with the
+    control-variate offset, ONE fused c_i refresh, and the two server
+    all-reduces.  ``c_i`` is arena-resident; only the server-sized x_s and c
+    rows (1/m of the state) repack per round."""
+    K, eta = cfg.inner_steps, cfg.eta
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    c_i = state["c_i"]  # arena-resident (m, width)
+    m = c_i.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+    c_row = spec.pack(state["c"])
+    x0 = jnp.broadcast_to(x_s_row[None], (m, spec.width))
+
+    x_K = inner_steps_plain_arena(
+        spec, grad_fn, x0, x_s_row, batch, K=K, eta=eta,
+        per_step=per_step_batches, c_i=c_i, c_row=c_row,
+    )
+
+    # fused per-client tail: c_i' = c_i - c + (x_s - x_K)/(K eta)
+    c_i_new = ops.scaffold_cv(c_i, x_K, c_row, x_s_row, 1.0 / (K * eta))
+    x_up = x_K
+    if cfg.participation < 1.0:
+        mask = T.participation_mask(
+            participation_key(cfg, state["round"]), m, cfg.participation
+        )
+        # silent clients transmit nothing: zero delta on both server means,
+        # control variate kept
+        c_i_new = jnp.where(mask[:, None], c_i_new, c_i)
+        x_up = jnp.where(mask[:, None], x_K, x_s_row[None])
+    # server: TWO all-reduces (x-delta and c-delta)
+    x_s_new = x_s_row + cfg.eta_g * (jnp.mean(x_up, axis=0) - x_s_row)
+    c_new = c_row + jnp.mean(c_i_new - c_i, axis=0)
+
+    new_state = {
+        "x_s": spec.unpack(x_s_new),  # server-sized; clients stay packed
+        "c": spec.unpack(c_new),
+        "c_i": c_i_new,
+        "round": state["round"] + 1,
+    }
+    f32 = jnp.float32
+    metrics = {
+        # invariant: sum_i (c_i - c) = 0 given zero init (padding is zero on
+        # both sides, so no masking is needed)
+        "c_sum_norm": jnp.linalg.norm(
+            jnp.sum((c_i_new - c_new[None]).astype(f32), axis=0)),
+        "client_drift": jnp.mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        "used_arena": jnp.ones((), f32),
+    }
+    return new_state, metrics
+
+
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
+    if use_arena(cfg, state["x_s"]):
+        return _round_arena(cfg, state, grad_fn, batch, per_step_batches)
     K, eta = cfg.inner_steps, cfg.eta
     x_s, c, c_i = state["x_s"], state["c"], state["c_i"]
     m = jax.tree.leaves(c_i)[0].shape[0]
@@ -43,9 +165,22 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     else:
         x_K, _ = jax.lax.scan(one_step, x_s_b, None, length=K)
 
-    c_i_new = T.tmap(lambda ci, cc, s, xk: ci - cc + (s - xk) / (K * eta), c_i, c_b, x_s_b, x_K)
+    # multiply by the precomputed 1/(K eta), NOT divide by (K eta): the same
+    # rounding as the fused arena kernel, so the parity tests compare paths
+    # at f32 resolution instead of absorbing a divide-vs-multiply ulp
+    alpha = 1.0 / (K * eta)
+    c_i_new = T.tmap(lambda ci, cc, s, xk: ci - cc + (s - xk) * alpha, c_i, c_b, x_s_b, x_K)
+    x_up = x_K
+    if cfg.participation < 1.0:
+        mask = T.participation_mask(
+            participation_key(cfg, state["round"]), m, cfg.participation
+        )
+        # silent clients transmit nothing (zero delta, c_i kept) -- same
+        # contract as the arena path
+        c_i_new = T.tree_select(mask, c_i_new, c_i)
+        x_up = T.tree_select(mask, x_K, x_s_b)
     # server: TWO all-reduces (x-delta and c-delta)
-    dx = T.tree_client_mean(T.tree_sub(x_K, x_s_b))
+    dx = T.tree_client_mean(T.tree_sub(x_up, x_s_b))
     dc = T.tree_client_mean(T.tree_sub(c_i_new, c_i))
     x_s_new = T.tree_axpy(cfg.eta_g, dx, x_s)
     c_new = T.tree_add(c, dc)
@@ -60,12 +195,30 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
         # invariant: sum_i (c_i - c) = 0 given zero init
         "c_sum_norm": T.tree_norm(T.tree_client_sum(T.tree_sub(c_i_new, T.tree_broadcast(c_new, m)))),
         "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        "used_arena": jnp.zeros((), jnp.float32),
     }
     return new_state, metrics
 
 
 def make(cfg: FederatedConfig) -> FedOpt:
+    if cfg.uplink_bits is not None:
+        raise NotImplementedError(
+            "SCAFFOLD transmits two coupled variables per direction; the "
+            "single-integrator EF21 uplink quantisation does not apply"
+        )
+
     def init(params, m):
+        if use_arena(cfg, params):
+            # arena-resident control variates: one (m, width) buffer donated
+            # in place round over round; x_s and c stay pytrees (the public
+            # server-params / server-variate contract, p_shard in launchers)
+            spec = arena.ArenaSpec.from_tree(params)
+            return {
+                "x_s": params,
+                "c": T.tree_zeros_like(params),
+                "c_i": arena.zeros(spec, m),
+                "round": jnp.zeros((), jnp.int32),
+            }
         return {
             "x_s": params,
             "c": T.tree_zeros_like(params),

@@ -18,14 +18,26 @@ the whole inner loop, versus K round trips for the step-at-a-time path (and
 the matvec hits the MXU instead of re-streaming the state through the VPU K
 times).
 
+Optional operands (both VMEM-resident per client, loaded once for all K
+steps):
+
+  * ``off`` -- a per-client offset row ADDED to the affine constant:
+    grad_i(x) = H_i x - (c_i + off_i).  This is the SCAFFOLD control-variate
+    hook: the client correction ``- c_i`` rides as ``off = c_i`` (sign folded
+    by the caller into c, see ``docs/inner_loop.md``) with ZERO extra HBM
+    materialisation -- the arena-resident control-variate buffer is read
+    directly.
+  * ``lam=None`` drops the dual operand entirely (SCAFFOLD/FedAvg run with
+    rho = 0 and no dual): one fewer row-sized HBM read per client.
+
 VMEM budget (``vmem_bytes``): the f32 working set of one grid step is the
-(W, W) H block plus ~8 row-sized (W,) buffers (x0/c/xs/lam in, x_K/x_bar
+(W, W) H block plus ~10 row-sized (W,) buffers (x0/c/xs/lam/off in, x_K/x_bar
 out, 2 loop-carry rows), which must fit the shared ``VMEM_CAP_BYTES`` (8 MiB
 = half the ~16 MiB/core, leaving room for Pallas' double-buffered pipeline).
 That caps W at ~1400 lanes; ``fits_vmem`` is the static gate the round uses
 to fall back to the step-at-a-time scan for wider problems.
 
-Layout contract (``core.arena``): W % 128 == 0; H rows/cols and c entries
+Layout contract (``core.arena``): W % 128 == 0; H rows/cols and c/off entries
 beyond each leaf's true size are ZERO so the padding invariant survives
 (padded coordinates see g = 0 - 0 and rho * (0 - 0) + 0, staying 0).
 """
@@ -41,8 +53,8 @@ from repro.kernels.fused_update import LANES, VMEM_CAP_BYTES, eq20
 
 
 def vmem_bytes(width: int) -> int:
-    """f32 working set of one client grid step: H (W x W) + ~8 rows."""
-    return 4 * (width * width + 8 * width)
+    """f32 working set of one client grid step: H (W x W) + ~10 rows."""
+    return 4 * (width * width + 10 * width)
 
 
 def fits_vmem(width: int) -> bool:
@@ -50,13 +62,20 @@ def fits_vmem(width: int) -> bool:
     return width % LANES == 0 and vmem_bytes(width) <= VMEM_CAP_BYTES
 
 
-def _kernel(x_ref, h_ref, c_ref, xs_ref, lam_ref, xk_ref, xb_ref, *,
-            K: int, step: float, rho: float):
+def _kernel(*refs, K: int, step: float, rho: float, has_lam: bool, has_off: bool):
+    it = iter(refs)
+    x_ref, h_ref, c_ref, xs_ref = next(it), next(it), next(it), next(it)
+    lam_ref = next(it) if has_lam else None
+    off_ref = next(it) if has_off else None
+    xk_ref, xb_ref = next(it), next(it)
+
     f32 = jnp.float32
     H = h_ref[0].astype(f32)  # (W, W), resident for all K steps
     c = c_ref[...].astype(f32)  # (1, W)
+    if off_ref is not None:  # per-client affine offset: g = H x - (c + off)
+        c = c + off_ref[...].astype(f32)
     xs = xs_ref[...].astype(f32)
-    lam = lam_ref[...].astype(f32)
+    lam = lam_ref[...].astype(f32) if lam_ref is not None else None
     x0 = x_ref[...].astype(f32)
 
     def body(_, carry):
@@ -75,30 +94,41 @@ def _kernel(x_ref, h_ref, c_ref, xs_ref, lam_ref, xk_ref, xb_ref, *,
 
 
 def inner_loop_affine_pallas(x0, H, c, x_s, lam, step, rho, K: int, *,
-                             interpret: bool = False):
-    """x0, c, lam: (m, W); H: (m, W, W); x_s: (W,) server row (broadcast
-    in-kernel).  Returns (x_K, x_bar), both (m, W)."""
+                             off=None, interpret: bool = False):
+    """x0, c: (m, W); H: (m, W, W); x_s: (W,) server row (broadcast
+    in-kernel); lam: (m, W) or None (dual term dropped); off: (m, W) or None
+    (per-client affine offset, g = H x - (c + off)).  Returns (x_K, x_bar),
+    both (m, W)."""
     m, w = x0.shape
     assert w % LANES == 0, f"arena width {w} not a multiple of {LANES}"
-    assert H.shape == (m, w, w) and c.shape == (m, w) and lam.shape == (m, w), (
-        H.shape, c.shape, lam.shape)
+    assert H.shape == (m, w, w) and c.shape == (m, w), (H.shape, c.shape)
+    assert lam is None or lam.shape == (m, w), lam.shape
+    assert off is None or off.shape == (m, w), off.shape
     assert fits_vmem(w), (
         f"width={w}: fused K-step working set {vmem_bytes(w)} B exceeds the "
         f"{VMEM_CAP_BYTES} B VMEM budget -- use the step-at-a-time path")
     row_bs = pl.BlockSpec((1, w), lambda i: (i, 0))
     out_sds = jax.ShapeDtypeStruct((m, w), x0.dtype)
+    args = [x0, H, c, x_s.reshape(1, w)]
+    in_specs = [
+        row_bs,
+        pl.BlockSpec((1, w, w), lambda i: (i, 0, 0)),
+        row_bs,
+        pl.BlockSpec((1, w), lambda i: (0, 0)),  # server row: every client
+    ]
+    if lam is not None:
+        args.append(lam)
+        in_specs.append(row_bs)
+    if off is not None:
+        args.append(off)
+        in_specs.append(row_bs)
     x_K, x_bar = pl.pallas_call(
-        functools.partial(_kernel, K=int(K), step=float(step), rho=float(rho)),
+        functools.partial(_kernel, K=int(K), step=float(step), rho=float(rho),
+                          has_lam=lam is not None, has_off=off is not None),
         grid=(m,),
-        in_specs=[
-            row_bs,
-            pl.BlockSpec((1, w, w), lambda i: (i, 0, 0)),
-            row_bs,
-            pl.BlockSpec((1, w), lambda i: (0, 0)),  # server row: every client
-            row_bs,
-        ],
+        in_specs=in_specs,
         out_specs=(row_bs, row_bs),
         out_shape=(out_sds, out_sds),
         interpret=interpret,
-    )(x0, H, c, x_s.reshape(1, w), lam)
+    )(*args)
     return x_K, x_bar

@@ -274,9 +274,11 @@ def fused_update(x, g, xs, lam, step, rho, *, impl: Optional[str] = None,
 
 def fused_update_arena(x, g, x_s, lam, step, rho, *, impl: Optional[str] = None,
                        block: Optional[int] = None):
-    """Eq. (20) inner step over the whole packed arena: x, g, lam (m, width);
-    x_s (width,) server row broadcast in-kernel (never materialised in HBM).
-    ONE kernel launch per inner step instead of one per pytree leaf."""
+    """Eq. (20) inner step over the whole packed arena: x, g (m, width);
+    lam (m, width) or None (dual term dropped -- SCAFFOLD/FedAvg's rho = 0
+    plain steps); x_s (width,) server row broadcast in-kernel (never
+    materialised in HBM).  ONE kernel launch per inner step instead of one
+    per pytree leaf."""
     impl = _resolve(impl)
     if impl == "xla":
         return _ref.fused_update_ref(x, g, x_s[None] if x_s.ndim == 1 else x_s, lam, step, rho)
@@ -288,26 +290,36 @@ def fused_update_arena(x, g, x_s, lam, step, rho, *, impl: Optional[str] = None,
 
 
 def inner_loop_affine(x0, H, c, x_s, lam, step, rho, K: int, *,
-                      impl: Optional[str] = None):
+                      off=None, impl: Optional[str] = None):
     """The WHOLE K-step eq. (20) inner loop for affine gradient oracles
-    (grad_i(x) = H_i x - c_i in arena coordinates): one kernel keeps each
-    client's row block + H in VMEM across all K steps -- 1 HBM read + 1
-    write of the client state for the whole loop instead of K round trips.
+    (grad_i(x) = H_i x - (c_i + off_i) in arena coordinates): one kernel
+    keeps each client's row block + H in VMEM across all K steps -- 1 HBM
+    read + 1 write of the client state for the whole loop instead of K round
+    trips.
 
-    x0, c, lam: (m, W); H: (m, W, W); x_s: (W,).  Returns (x_K, x_bar).
-    Callers must gate on ``affine_inner_fits(W)`` (the VMEM budget).
+    x0, c: (m, W); H: (m, W, W); x_s: (W,).  ``lam=None`` drops the dual
+    operand (SCAFFOLD/FedAvg run rho = 0 with no dual); ``off`` is the
+    optional per-client offset row added to the affine constant -- the
+    SCAFFOLD control-variate buffer rides here with zero extra HBM
+    materialisation.  Returns (x_K, x_bar).  Callers must gate on
+    ``affine_inner_fits(W)`` (the VMEM budget).
     """
     impl = _resolve(impl)
     if impl == "xla":
         f32 = jnp.float32
         x_s_b = x_s.astype(f32)[None]
-        lam_f = lam.astype(f32)
+        lam_f = lam.astype(f32) if lam is not None else None
         Hf, cf = H.astype(f32), c.astype(f32)
+        if off is not None:
+            cf = cf + off.astype(f32)
 
         def body(carry, _):
             x, xsum = carry
             g = jnp.einsum("mij,mj->mi", Hf, x) - cf
-            x = x - step * (g + rho * (x - x_s_b) + lam_f)
+            acc = g + rho * (x - x_s_b)
+            if lam_f is not None:
+                acc = acc + lam_f
+            x = x - step * acc
             return (x, xsum + x), None
 
         init = (x0.astype(f32), jnp.zeros_like(x0, f32))
@@ -316,7 +328,31 @@ def inner_loop_affine(x0, H, c, x_s, lam, step, rho, K: int, *,
     from repro.kernels import inner_loop as il
 
     return il.inner_loop_affine_pallas(
-        x0, H, c, x_s, lam, step, rho, K, interpret=(impl == "pallas_interpret")
+        x0, H, c, x_s, lam, step, rho, K, off=off,
+        interpret=(impl == "pallas_interpret")
+    )
+
+
+def scaffold_cv(c_i, x_K, c_s, x_s, alpha, *, impl: Optional[str] = None,
+                block: Optional[int] = None):
+    """SCAFFOLD eq. (30) control-variate refresh, fused into one pass:
+
+        c_i' = c_i - c + alpha (x_s - x_K)          (alpha = 1/(K eta))
+
+    c_i, x_K: (m, width) client buffers; c_s, x_s: (width,) server rows
+    broadcast in-kernel.  2 client reads + 1 write instead of the ~5-pass
+    per-leaf tmap chain (which additionally materialises both server
+    broadcasts at (m, width))."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        f32 = jnp.float32
+        out = (c_i.astype(f32) - c_s.astype(f32)[None]
+               + alpha * (x_s.astype(f32)[None] - x_K.astype(f32)))
+        return out.astype(c_i.dtype)
+    from repro.kernels import round_tail as rt
+
+    return rt.scaffold_cv_pallas(
+        c_i, x_K, c_s, x_s, alpha, block=block, interpret=(impl == "pallas_interpret")
     )
 
 

@@ -125,6 +125,48 @@ def round_tail_pallas(x_ref, lam_s, x_s, rho, *, with_lam_is: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# SCAFFOLD control-variate refresh (the per-client half of the round tail;
+# the two server all-reduces stay jnp means -- they ARE the collectives)
+# ---------------------------------------------------------------------------
+
+def _scaffold_cv_kernel(ci_ref, xk_ref, c_ref, xs_ref, o_ref, *, alpha: float):
+    f32 = jnp.float32
+    ci = ci_ref[0].astype(f32)
+    xk = xk_ref[0].astype(f32)
+    c = c_ref[...].astype(f32)
+    xs = xs_ref[...].astype(f32)
+    o_ref[0] = (ci - c + alpha * (xs - xk)).astype(o_ref.dtype)
+
+
+def scaffold_cv_pallas(c_i, x_K, c_s, x_s, alpha, *, block=None, interpret: bool = False):
+    """SCAFFOLD eq. (30) control-variate update in ONE pass:
+
+        c_i' = c_i - c + (x_s - x_K) * alpha        (alpha = 1/(K eta))
+
+    c_i, x_K: (m, width) client buffers; c_s, x_s: (width,) server rows
+    (broadcast in-kernel, never materialised at (m, width)).  2 client reads
+    + 1 write instead of the ~5-pass per-leaf tmap chain."""
+    m, w = c_i.shape
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(5, br)
+    ct, _, rows_p = _tile(c_i, br)
+    xt, _, _ = _tile(x_K, br)
+    cst, _, _ = _tile(c_s, br)
+    st, _, _ = _tile(x_s, br)
+    client_bs = pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0))
+    server_bs = pl.BlockSpec((br, LANES), lambda i, j: (j, 0))
+    out = pl.pallas_call(
+        functools.partial(_scaffold_cv_kernel, alpha=float(alpha)),
+        grid=(m, rows_p // br),
+        in_specs=[client_bs, client_bs, server_bs, server_bs],
+        out_specs=client_bs,
+        out_shape=jax.ShapeDtypeStruct((m, rows_p, LANES), c_i.dtype),
+        interpret=interpret,
+    )(ct, xt, cst, st)
+    return _untile(out, w, (m,))
+
+
+# ---------------------------------------------------------------------------
 # lam_s' = rho (u - x_s') -- the post-all-reduce dual refresh
 # ---------------------------------------------------------------------------
 
@@ -235,23 +277,39 @@ def _update_kernel(x_ref, g_ref, xs_ref, lam_ref, o_ref, *, step: float, rho: fl
     o_ref[0] = out.astype(o_ref.dtype)
 
 
+def _update_kernel_nolam(x_ref, g_ref, xs_ref, o_ref, *, step: float, rho: float):
+    # lam-free variant (SCAFFOLD/FedAvg, rho = 0 plain SGD steps): one fewer
+    # full (m, width) HBM read per inner step
+    f32 = jnp.float32
+    out = eq20(x_ref[0].astype(f32), g_ref[0].astype(f32),
+               xs_ref[...].astype(f32), None, step, rho)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
 def fused_update_arena_pallas(x, g, x_s, lam, step, rho, *, block=None, interpret: bool = False):
-    """x, g, lam: (m, width); x_s: (width,) server row (broadcast in-kernel).
-    One pallas_call over the whole packed buffer."""
+    """x, g: (m, width); x_s: (width,) server row (broadcast in-kernel);
+    lam: (m, width) or None (dual term dropped).  One pallas_call over the
+    whole packed buffer."""
     m, w = x.shape
     br = _resolve_block(block, w // LANES)
-    assert_vmem_budget(5, br)
+    assert_vmem_budget(4 if lam is None else 5, br)
     xt, _, rows_p = _tile(x, br)
     gt, _, _ = _tile(g, br)
     st, _, _ = _tile(x_s, br)
-    lt, _, _ = _tile(lam, br)
     client_bs = pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0))
+    server_bs = pl.BlockSpec((br, LANES), lambda i, j: (j, 0))
+    args, in_specs = [xt, gt, st], [client_bs, client_bs, server_bs]
+    if lam is not None:
+        lt, _, _ = _tile(lam, br)
+        args.append(lt)
+        in_specs.append(client_bs)
+    kernel = _update_kernel_nolam if lam is None else _update_kernel
     out = pl.pallas_call(
-        functools.partial(_update_kernel, step=float(step), rho=float(rho)),
+        functools.partial(kernel, step=float(step), rho=float(rho)),
         grid=(m, rows_p // br),
-        in_specs=[client_bs, client_bs, pl.BlockSpec((br, LANES), lambda i, j: (j, 0)), client_bs],
+        in_specs=in_specs,
         out_specs=client_bs,
         out_shape=jax.ShapeDtypeStruct((m, rows_p, LANES), x.dtype),
         interpret=interpret,
-    )(xt, gt, st, lt)
+    )(*args)
     return _untile(out, w, (m,))

@@ -134,7 +134,10 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
 
     # arena-resident client state (use_arena, non-fsdp): one (m, width)
     # buffer -- client dim over the client axes, packed width replicated
-    # (leaves are concatenated, so per-leaf TP specs don't apply)
+    # (leaves are concatenated, so per-leaf TP specs don't apply).  Covers
+    # every algorithm's stacked residents: lam_s/x_c/u_hat (GPDMM/AGPDMM),
+    # z_s (FedSplit), c_i/u_hat (SCAFFOLD/FedAvg); the server-sized x_s and
+    # c stay pytrees under the per-leaf parameter shardings.
     cax = sh.client_axes(mesh) if layout == "client_axis" else None
     arena_shard = NamedSharding(mesh, P(cax, None))
 
