@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro.core import topology
 from repro.kernels import ops, ref
 
 
@@ -53,10 +54,33 @@ def bench_flash():
     emit("kernel_flash_xla_rectangular_S2048", us_r, f"causal_skip_saves={(us_r-us_f)/us_r:.1%}")
 
 
+def bench_neighbor_reduce():
+    """Graph-PDMM dual reduce + flip over a 16-node ring's edge-dual arena
+    (32 directed slots x 1M lanes).  The XLA cells are the CPU reference
+    (segment-sum / gather); the Pallas kernels are the TPU target and are
+    validated in interpret mode by tests/test_topology.py."""
+    t = topology.ring(16)
+    w = 1 << 20
+    k = jax.random.key(3)
+    z = jax.random.normal(k, (t.n_slots, w))
+    x = jax.random.normal(jax.random.fold_in(k, 1), (t.n, w))
+    red = jax.jit(lambda zz: ops.neighbor_reduce(
+        zz, seg=t.src, first=t.first_flags(), sgn=t.sgn, n=t.n, impl="xla"))
+    us_r = time_fn(red, z)
+    gbps_r = (t.n_slots + t.n) * w * 4 / (us_r * 1e-6) / 1e9
+    emit("kernel_neighbor_reduce_xla_ring16_1M", us_r, f"effective_GBps={gbps_r:.2f}")
+    flip = jax.jit(lambda zz, xx: ops.edge_flip(
+        zz, xx, 2.0, rev=t.rev, nbr=t.nbr, sgn=t.sgn, impl="xla"))
+    us_f = time_fn(flip, z, x)
+    gbps_f = 3 * t.n_slots * w * 4 / (us_f * 1e-6) / 1e9
+    emit("kernel_edge_flip_xla_ring16_1M", us_f, f"effective_GBps={gbps_f:.2f}")
+
+
 def run():
     bench_fused_update()
     bench_wkv6()
     bench_flash()
+    bench_neighbor_reduce()
 
 
 if __name__ == "__main__":

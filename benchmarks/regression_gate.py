@@ -2,10 +2,13 @@
 
 Compares a fresh ``round_bench`` run against the committed
 ``BENCH_round.json`` baseline and FAILS (exit 1) if ``us_per_round`` for any
-gated cell -- (algo in {gpdmm, scaffold}, variant=plain, path=arena), per
-problem shape / oracle / driver -- regresses more than ``--max-regress``
-(default 20%).  SCAFFOLD joined the gate with ISSUE 3: it is the paper's
-primary baseline, so its arena hot path is guarded exactly like GPDMM's.
+gated cell -- (algo in {gpdmm, agpdmm, scaffold, fedavg}, variant=plain,
+path=arena), per problem shape / oracle / driver -- regresses more than
+``--max-regress`` (default 20%).  SCAFFOLD joined the gate with ISSUE 3 (the
+paper's primary baseline); AGPDMM and FedAvg joined with ISSUE 4, so every
+algorithm the paper's figures compare now has its arena hot path guarded --
+a regression in any one of them would silently skew the cross-algorithm
+wall-time story.
 
 Hardware neutrality: the committed baseline was produced on a different
 machine than the CI runner, and absolute wall times swing with runner
@@ -36,9 +39,14 @@ import sys
 
 GATED = [
     {"algo": "gpdmm", "variant": "plain", "path": "arena"},
+    {"algo": "agpdmm", "variant": "plain", "path": "arena"},
     {"algo": "scaffold", "variant": "plain", "path": "arena"},
+    {"algo": "fedavg", "variant": "plain", "path": "arena"},
 ]
-KEY_FIELDS = ("problem", "algo", "variant", "path", "oracle", "driver", "K")
+# "topology" (ISSUE 4) distinguishes the gpdmm_graph rows (star/ring/
+# complete at the same problem shape); records predating it key as None
+KEY_FIELDS = ("problem", "algo", "variant", "path", "oracle", "driver", "K",
+              "topology")
 
 
 def _is_gated(rec) -> bool:
@@ -58,8 +66,8 @@ def _index(payload):
 
 def _sibling_key(key):
     """The same-run pytree reference cell for a gated arena cell."""
-    problem, algo, variant, _path, _oracle, driver, K = key
-    return (problem, algo, variant, "pytree", "tree", driver, K)
+    problem, algo, variant, _path, _oracle, driver, K, topology = key
+    return (problem, algo, variant, "pytree", "tree", driver, K, topology)
 
 
 def gate(baseline_path: str, fresh_path: str, max_regress: float) -> int:

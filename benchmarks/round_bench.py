@@ -1,10 +1,12 @@
 """Whole-round benchmark: per-leaf pytree path vs flat-arena + fused
 round-tail path (ISSUE 1 tentpole acceptance), extended with the ISSUE 2
 inner-loop rework (arena-native gradient oracles, 0 boundary passes per
-step; the round-batched ``lax.scan`` driver, one dispatch per R rounds) and
-the ISSUE 3 cross-algorithm rows: SCAFFOLD and FedAvg now run the same
-arena fast path, so every paper figure comparing them against GPDMM/AGPDMM
-measures the ALGORITHM, not a per-leaf-pytree implementation tax.
+step; the round-batched ``lax.scan`` driver, one dispatch per R rounds), the
+ISSUE 3 cross-algorithm rows (SCAFFOLD and FedAvg on the same arena fast
+path, so every paper figure comparing them against GPDMM/AGPDMM measures the
+ALGORITHM, not a per-leaf-pytree implementation tax), and the ISSUE 4
+topology rows: decentralized graph-PDMM (ring vs star vs complete) at the
+lm_flat shape plus the neighbor-reduce kernel cell.
 
 The federated round is memory-bound elementwise math over the stacked
 ``(m, params)`` client state, so the figure of merit is full-state HBM
@@ -46,7 +48,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.configs.base import FederatedConfig
-from repro.core import make, make_oracle, make_scan_rounds
+from repro.core import arena, make, make_oracle, make_scan_rounds, pdmm_graph
+from repro.kernels import ops
 
 PROBLEMS = {
     "small": {"m": 8, "shapes": {"w": (24,)}},
@@ -269,14 +272,102 @@ def bench_round(problem: str, algo: str, variant: str, K: int = 4):
     return records
 
 
+# ISSUE 4: decentralized graph-PDMM rows -- ring vs star vs complete at the
+# LM-scale flat shape.  One graph round = (per firing phase) the fused
+# neighbor reduce over the (2E, width) edge-dual arena, the K-step inner
+# loop on the firing nodes, and the one-pass directed dual flip.
+TOPOLOGIES = ("star", "ring", "complete")
+
+
+def graph_round_passes(topo, K: int, m: int) -> float:
+    """Full-(m, N) elementwise passes per graph round (row ops / m), same
+    conventions as ``round_passes``: grad math excluded, row-sized server
+    reads excluded, one fused eq.-(20)-style update = 3r + 1w (x, g, s; the
+    zero server row is O(1/m)), neighbor reduce = read 2E + write n rows,
+    dual flip = read z[rev] + gather x[nbr] + write = 3 x 2E rows."""
+    rows = 0
+    for members in topo.colors:
+        dm = members[members < topo.n_data]
+        am = members[members >= topo.n_data]
+        rows += topo.n_slots + topo.n  # neighbor reduce
+        rows += 4 * K * int(dm.size)  # fused inner steps on firing rows
+        rows += 2 * int(am.size)  # aux closed form: read s row + write x row
+        rows += 3 * topo.n_slots  # edge flip
+    return rows / m
+
+
+def bench_topology(problem: str = "lm_flat", K: int = 4):
+    """gpdmm_graph at the lm_flat shape across topologies, plus the
+    neighbor-reduce kernel cell: the Pallas path is timed against the XLA
+    segment-sum reference whenever a TPU backend is present (on CPU only the
+    XLA reference runs -- interpret mode measures correctness, not speed)."""
+    jax.clear_caches()
+    spec = PROBLEMS[problem]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    n = sum(int(jnp.size(v)) for v in params.values())
+    batch = {"dummy": jnp.zeros((m, 1))}
+    records = []
+    for topo_name in TOPOLOGIES:
+        cfg = FederatedConfig(algorithm="gpdmm_graph", topology=topo_name,
+                              inner_steps=K, eta=0.1)
+        opt = make(cfg)
+        state = opt.init(params, m)
+        fn = jax.jit(lambda s: opt.round(s, _native_grad, batch)[0])
+        us = time_fn(fn, state)
+        topo = pdmm_graph.topo_for(cfg, m)
+        passes = graph_round_passes(topo, K, m)
+        rec = _record(problem, "gpdmm_graph", "plain", "arena", "native",
+                      "per_round", m, n, K, us, passes)
+        rec["topology"] = topo_name
+        records.append(rec)
+        print(f"  -> {problem}/gpdmm_graph/{topo_name}: "
+              f"{rec['us_per_round']:.0f} us/round "
+              f"(n={topo.n} nodes, {topo.n_edges} edges)")
+
+    # neighbor-reduce kernel cell at the same shape (ring: 2E = 2m rows)
+    cfg = FederatedConfig(algorithm="gpdmm_graph", topology="ring")
+    topo = pdmm_graph.topo_for(cfg, m)
+    width = arena.ArenaSpec.from_tree(params).width
+    z = jax.random.normal(jax.random.key(5), (topo.n_slots, width))
+    impls = ["xla"] + (["pallas"] if jax.default_backend() == "tpu" else [])
+    for impl in impls:
+        fn = jax.jit(lambda zz: ops.neighbor_reduce(
+            zz, seg=topo.src, first=topo.first_flags(), sgn=topo.sgn,
+            n=topo.n, impl=impl))
+        us = time_fn(fn, z)
+        gbps = (topo.n_slots + topo.n) * width * 4 / (us * 1e-6) / 1e9
+        emit(f"neighbor_reduce_{problem}_ring_{impl}", us,
+             f"effective_GBps={gbps:.2f}")
+        records.append({
+            "problem": problem, "algo": "neighbor_reduce", "variant": "ring",
+            "path": f"kernel_{impl}", "oracle": "native", "driver": "per_call",
+            "m": m, "n_params": n, "K": 0,
+            "us_per_round": round(us, 1),
+            "hbm_passes": (topo.n_slots + topo.n) / m,
+            "state_bytes": m * n * 4,
+            "effective_GBps": round(gbps, 2),
+            "topology": "ring",
+        })
+    return records
+
+
 def run(out_path: str = "BENCH_round.json"):
     trajectory = []
     for problem in PROBLEMS:
         for algo, variants in ALGO_VARIANTS.items():
             for variant in variants:
                 trajectory.extend(bench_round(problem, algo, variant))
+    trajectory.extend(bench_topology())
     payload = {
         "bench": "round_bench",
+        "topology_note": "gpdmm_graph rows (ISSUE 4) run the decentralized "
+                "graph-PDMM round (core.pdmm_graph) at the lm_flat shape; "
+                "the topology column names the consensus graph.  The "
+                "neighbor_reduce rows time the kernel alone on the ring's "
+                "edge-dual arena (path=kernel_xla is the segment-sum "
+                "reference; kernel_pallas appears when a TPU is present and "
+                "must be no slower).",
         "note": "hbm_passes are analytic full-(m,N) elementwise passes per "
                 "round (grad math excluded, identical on all paths); "
                 "effective_GBps = passes * state_bytes / wall_time.  oracle: "

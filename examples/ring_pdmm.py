@@ -1,0 +1,47 @@
+"""Decentralized PDMM over a ring -- no server at all, in ~25 lines.
+
+Each node talks only to its two ring neighbors, exchanging one directed dual
+per edge per round (the general-network PDMM the paper specializes to a
+star); every node still converges to the GLOBAL least-squares optimum.
+
+    PYTHONPATH=src python examples/ring_pdmm.py [rounds]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+from repro.core import make, quadratic
+
+rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 300
+
+# The same federated least-squares problem as quickstart.py -- but solved
+# over a ring of 8 peers instead of a client-server star.
+prob = quadratic.generate(jax.random.key(0), m=8, n=400, d=64)
+
+cfg = FederatedConfig(algorithm="gpdmm", topology="ring",
+                      inner_steps=5, eta=0.5 / prob.L)
+opt = make(cfg)  # topology != "star" routes gpdmm to graph-PDMM
+assert opt.name == "gpdmm_graph"
+state = opt.init(jnp.zeros((prob.d,)), prob.m)
+
+
+@jax.jit
+def round_fn(s):
+    return opt.round(s, prob.oracle(), prob.batch())
+
+
+for r in range(rounds):
+    state, metrics = round_fn(state)
+    if r % max(1, rounds // 5) == 0 or r == rounds - 1:
+        dist = float(prob.dist(opt.server_params(state)))
+        print(f"round {r:3d}  ||x - x*|| {dist:.3e}  "
+              f"consensus {float(metrics['consensus_err']):.2e}")
+
+# every node individually (not just the mean) reaches the global optimum
+worst = float(jnp.max(jnp.linalg.norm(
+    state["x"][:, : prob.d] - prob.x_star[None], axis=1)))
+print(f"worst per-node distance to x*: {worst:.3e}")
+assert worst < 1e-2, worst
+print("converged -- decentralized PDMM solves the global problem on a ring.")

@@ -118,6 +118,23 @@ class FederatedConfig:
     # amortising the per-round dispatch overhead that dominates wall time at
     # small state sizes.  1 = one dispatch per round (previous behaviour).
     rounds_per_call: int = 1
+    # Network topology of the consensus graph.  "star" (the paper's
+    # centralised network, the default) keeps every algorithm on its
+    # centralised fast path; any other value routes PDMM/GPDMM through the
+    # decentralized graph subsystem (``core.pdmm_graph`` over
+    # ``core.topology``: node-primal + edge-dual arenas, neighbor-reduce
+    # kernels).  Accepted: "star" | "ring" | "complete" | "torus" |
+    # "er"/"er:<p>" (Erdos-Renyi, made connected, drawn from ``seed``).
+    # Algorithms without a decentralized analogue (scaffold / fedavg /
+    # agpdmm / fedsplit) reject non-star topologies loudly in ``core.make``.
+    topology: str = "star"
+    # Firing schedule of the graph rounds: "color" fires the greedy color
+    # classes sequentially within a round (on a star: clients then server --
+    # exactly the centralised algorithm, the conformance contract in
+    # tests/test_topology.py); "sync" fires every node at once from the
+    # round-start duals (Jacobi PDMM).  Stochastic node firing rides
+    # ``participation`` < 1 on the shared ``seed`` mask contract.
+    graph_schedule: str = "color"
     # beyond-paper: SVRG-style variance reduction for the stochastic setting
     # the paper names as future work (SSVII), following [14]'s PDMM+SVRG for
     # P2P.  "svrg" corrects each per-step minibatch gradient with the

@@ -184,7 +184,7 @@ def make_scan_rounds(fed: FedOpt, grad_fn, per_step_batches: bool = False):
 
 
 def make(cfg: FederatedConfig) -> FedOpt:
-    from repro.core import agpdmm, fedavg, fedsplit, gpdmm, scaffold
+    from repro.core import agpdmm, fedavg, fedsplit, gpdmm, pdmm_graph, scaffold
 
     algos = {
         "gpdmm": gpdmm.make,
@@ -192,7 +192,23 @@ def make(cfg: FederatedConfig) -> FedOpt:
         "scaffold": scaffold.make,
         "fedavg": fedavg.make,
         "fedsplit": fedsplit.make_inexact,
+        # decentralized graph-PDMM (core.pdmm_graph over core.topology);
+        # explicit names run the graph subsystem on ANY topology incl. star
+        # (the conformance oracle), while plain "gpdmm" on a non-star
+        # topology reroutes below
+        "pdmm_graph": pdmm_graph.make_exact,
+        "gpdmm_graph": pdmm_graph.make,
     }
     if cfg.algorithm not in algos:
         raise KeyError(f"unknown federated algorithm {cfg.algorithm!r}")
+    if cfg.topology != "star" and cfg.algorithm not in ("pdmm_graph", "gpdmm_graph"):
+        if cfg.algorithm == "gpdmm":
+            # GPDMM over a general network IS graph-PDMM with the gradient
+            # inner loop; route it rather than silently ignoring the topology
+            return pdmm_graph.make(cfg)
+        raise ValueError(
+            f"algorithm {cfg.algorithm!r} has no decentralized analogue over "
+            f"topology={cfg.topology!r}; use 'gpdmm' (rerouted to graph-PDMM), "
+            f"'gpdmm_graph', or 'pdmm_graph'"
+        )
     return algos[cfg.algorithm](cfg)

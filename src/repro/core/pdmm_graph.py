@@ -1,0 +1,364 @@
+"""Decentralized PDMM over a general graph topology (Zhang & Heusdens,
+*Distributed Optimization Using the Primal-Dual Method of Multipliers*;
+Sherson et al., *Derivation and Analysis of PDMM Based on Monotone Operator
+Theory*) -- the setting the source paper specializes to a star.
+
+Consensus problem over a connected graph G = (V, E):
+
+    min sum_i f_i(x_i)   s.t.  A_{ij} x_i + A_{ji} x_j = 0  for (i,j) in E
+
+with A_{ij} = +I if i < j else -I (so every edge enforces x_i = x_j).  Each
+DIRECTED edge carries a dual z_{i|j} held by node i; one node update reads
+only the node's own duals:
+
+    x_i   = argmin_x f_i(x) + s_i^T x + (c d_i / 2) ||x||^2,
+            s_i = sum_{j in N(i)} A_{ij} z_{i|j}                (prox step)
+    z_{j|i}' = z_{i|j} + 2 c A_{ij} x_i   for j in N(i)         (dual flip)
+
+Firing schedules (``FederatedConfig.graph_schedule``):
+
+  * ``"color"`` (default) -- color classes of the greedy coloring fire
+    sequentially within a round, each phase re-reducing the freshly flipped
+    duals.  On a star ({clients}, {server}) this IS the centralised
+    algorithm: with z_{i|s} = lam_{s|i} - rho x_s the rounds reproduce
+    ``core.pdmm`` / ``core.gpdmm`` iterate-for-iterate (the conformance
+    oracle in ``tests/test_topology.py``).
+  * ``"sync"`` -- all nodes fire at once from the round-start duals
+    (Jacobi / synchronous PDMM).
+
+Stochastic firing (``cfg.participation < 1``): each round a random subset of
+DATA nodes fires, drawn from the shared ``FederatedConfig.seed`` mask
+contract (``gpdmm.participation_key``), the decentralized analogue of
+partial participation; silent nodes keep their primal carry and their
+neighbors keep the stale duals -- exactly the centralised ``u_hat`` cache
+semantics on a star.  Aux nodes (star's f = 0 center) always fire.
+
+Two objective interfaces, mirroring the centralised pair:
+
+  * ``make_exact`` (algorithm ``"pdmm_graph"``) -- ``round(state, prox_fn,
+    batch)`` with ``prox_fn(v_stacked, rho)`` where rho may be a PER-NODE
+    ``(k,)`` array (c * degree varies across nodes).  A prox accepting the
+    optional STATIC ``idx`` kwarg (``quadratic.LeastSquares
+    .make_client_prox`` does) is evaluated only on each phase's firing
+    subset; plain 2-arg proxes are evaluated at the full stacking with the
+    firing rows selected.
+  * ``make`` (algorithm ``"gpdmm_graph"``) -- the gradient-based inner loop
+    (K inexact steps, stepsize 1/(1/eta + c d_i)), resolved through the
+    ``core.api`` oracle protocol: affine oracles fold the neighbor-dual sum
+    s_i into the affine offset row and run the WHOLE K-step loop as the one
+    fused kernel in ``kernels/inner_loop.py`` (per-node stepsizes and the
+    c d_i I curvature shift are folded into (H, c) outside the kernel);
+    ``grad_arena`` oracles (softmax regression) scan the fused arena update
+    with zero boundary passes.
+
+State is arena-native: ``x`` is the ``(n, width)`` node-primal arena (the
+gradient carry), ``z`` the ``(2|E|, width)`` edge-dual arena
+(``core.topology`` slot layout), both donated in place; ``x_s`` is the
+server-sized consensus estimate pytree (the aux node's row on a star, the
+node mean otherwise) kept for the ``server_params`` contract.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederatedConfig
+from repro.core import arena, topology
+from repro.core import tree_util as T
+from repro.core.api import FedOpt, affine_case, arena_grad, resolved_rho
+from repro.core.gpdmm import participation_key
+from repro.kernels import ops
+
+
+def _prox_takes_idx(fn) -> bool:
+    """Does the prox oracle accept the static firing-subset ``idx`` kwarg
+    (``make_client_prox`` does)?  Plain 2-arg proxes fall back to the
+    full-stacking evaluation."""
+    try:
+        return "idx" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled(spec_str: str, m: int, seed: int) -> topology.Topology:
+    """Topology compilation cache: pure in (spec, m, seed), so the round can
+    rebuild the static tables from the state shape alone."""
+    return topology.make(spec_str, m, seed=seed)
+
+
+def topo_for(cfg: FederatedConfig, m: int) -> topology.Topology:
+    return _compiled(cfg.topology, m, cfg.seed)
+
+
+def _n_data_of(cfg: FederatedConfig, n_nodes: int) -> int:
+    """Data-node count from the node-primal arena's row count (star carries
+    one aux center)."""
+    return n_nodes - 1 if cfg.topology.partition(":")[0] == "star" else n_nodes
+
+
+def edge_duals_init(topo: topology.Topology, row, c: float):
+    """Round-0 edge duals z_{i|j} = c A_{ji} x_j^0 = -c sgn * row: on a star
+    this is exactly the centralised zero-lam init (z_{i|s} = -rho x_s^0 and
+    z_{s|i} = rho u_i^0)."""
+    sgnf = jnp.asarray(topo.sgn, jnp.float32)
+    return ((-c) * sgnf[:, None] * row[None].astype(jnp.float32)).astype(row.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the K-step gradient inner loop for one firing set of data nodes
+# ---------------------------------------------------------------------------
+
+def inner_steps_graph(spec, grad_fn, x0, s, batch, *, K, eta, c, deg, per_step):
+    """K inexact-PDMM steps at stepsize 1/(1/eta + c d_i) for the stacked
+    data nodes: x <- x - step_i (grad f_i(x) + c d_i x + s_i).
+
+    On a star (d_i = 1, s_i = lam_{s|i} - rho x_s) this is the centralised
+    eq. (20) verbatim.  Resolution, fastest first (core.api protocol):
+
+      1. affine oracle + width fits VMEM: the whole loop is ONE
+         ``kernels/inner_loop.py`` kernel.  Per-node stepsizes fold into the
+         affine pair (H' = step_i (H + c d_i I), c' = step_i c) and the
+         neighbor-dual sum rides the dual operand (lam = step_i s_i), so the
+         kernel runs with unit step and zero rho -- no kernel change needed.
+      2. constant data-node degree (star/ring/torus/complete): a scan of the
+         fused arena update with rho = c d, the server row pinned to zero.
+      3. irregular degrees (er): a plain jnp scan with per-node step/degree
+         columns (still zero boundary passes with an arena-native oracle).
+
+    deg: STATIC numpy per-node degrees.  Returns (x_K, x_bar).
+    """
+    step = 1.0 / (1.0 / eta + c * deg.astype(np.float64))  # static numpy (k,)
+
+    affine = affine_case(grad_fn, spec, per_step=per_step)
+    if affine is not None:
+        H, cc = affine(spec, batch)
+        f32 = jnp.float32
+        stepc = jnp.asarray(step, f32)[:, None]
+        cd = jnp.asarray(c * deg, f32)[:, None, None]
+        # + c d_i I touches padded diagonal entries too -- harmless, padded
+        # coordinates update as x - step * c d_i * 0 and stay identically 0
+        Hs = (H.astype(f32) + cd * jnp.eye(spec.width, dtype=f32)) * stepc[..., None]
+        cs = cc.astype(f32) * stepc
+        lam = s.astype(f32) * stepc
+        zero_row = jnp.zeros((spec.width,), x0.dtype)
+        return ops.inner_loop_affine(x0, Hs, cs, zero_row, lam, 1.0, 0.0, int(K))
+
+    grad_a, _native = arena_grad(grad_fn, spec)
+    const_deg = bool((deg == deg[0]).all())
+    if const_deg:
+        rho_eff = float(c * deg[0])
+        stp = float(step[0])
+        zero_row = jnp.zeros((spec.width,), x0.dtype)
+
+        def one_step(carry, xs_k):
+            x, xsum = carry
+            b = xs_k if per_step else batch
+            g = grad_a(x, b)
+            x_new = ops.fused_update_arena(x, g, zero_row, s, stp, rho_eff)
+            return (x_new, xsum + x_new), None
+    else:
+        f32 = jnp.float32
+        stp = jnp.asarray(step, f32)[:, None]
+        cd = jnp.asarray(c * deg, f32)[:, None]
+
+        def one_step(carry, xs_k):
+            x, xsum = carry
+            b = xs_k if per_step else batch
+            g = grad_a(x, b).astype(f32)
+            xf = x.astype(f32)
+            x_new = (xf - stp * (g + cd * xf + s.astype(f32))).astype(x0.dtype)
+            return (x_new, xsum + x_new), None
+
+    init = (x0, jnp.zeros_like(x0))
+    if per_step:
+        (x_K, xsum), _ = jax.lax.scan(one_step, init, batch)
+    else:
+        (x_K, xsum), _ = jax.lax.scan(one_step, init, None, length=K)
+    return x_K, xsum * (1.0 / K)
+
+
+# ---------------------------------------------------------------------------
+# one firing phase (a color class, or all nodes under the sync schedule)
+# ---------------------------------------------------------------------------
+
+def _phase(cfg, topo, spec, x, z, fn, batch, per_step, pmask, c, exact, members):
+    """Nodes in ``members`` (static) fire: re-reduce the duals, update their
+    primal rows, flip the duals on their incident edges.  ``pmask`` (dynamic
+    (n_data,) bool or None) silences data nodes for stochastic firing."""
+    s = ops.neighbor_reduce(
+        z, seg=topo.src, first=topo.first_flags(), sgn=topo.sgn, n=topo.n
+    )
+    dm = members[members < topo.n_data]  # static firing data nodes
+    am = members[members >= topo.n_data]  # static firing aux (f = 0) nodes
+    x_flip = x
+
+    if dm.size:
+        deg_dm = topo.deg[dm]
+        x0 = x[dm]
+        s_dm = s[dm]
+        take = (lambda a: a[:, dm]) if per_step else (lambda a: a[dm])
+        b_dm = jax.tree.map(take, batch)
+        if exact:
+            # x_i = argmin f_i + s^T x + (c d_i/2)||x||^2
+            #     = prox_{f_i, c d_i}(-s_i / (c d_i)); per-node rho array.
+            rho_dm = jnp.asarray(c * deg_dm, jnp.float32)
+            if _prox_takes_idx(fn):
+                # idx-aware prox (make_client_prox): evaluate ONLY the
+                # firing subset's data -- on multi-color topologies the
+                # full-stacking alternative would redo the whole prox once
+                # per color class and discard all but these rows
+                v_rows = -s_dm.astype(jnp.float32) / rho_dm[:, None]
+                x_cand = spec.pack_stacked(
+                    fn(spec.unpack_stacked(v_rows.astype(x.dtype)), rho_dm,
+                       idx=dm)
+                )
+            else:
+                # plain 2-arg prox closes over data stacked for ALL n_data
+                # clients: evaluate at the full stacking and select the
+                # firing rows (a star's data nodes share one color, so
+                # nothing is discarded there)
+                nd = topo.n_data
+                rho_all = jnp.asarray(c * topo.deg[:nd], jnp.float32)
+                v_rows = -s[:nd].astype(jnp.float32) / rho_all[:, None]
+                x_all = spec.pack_stacked(
+                    fn(spec.unpack_stacked(v_rows.astype(x.dtype)), rho_all)
+                )
+                x_cand = x_all[dm]
+            x_ref = x_cand
+        else:
+            x_K, x_bar = inner_steps_graph(
+                spec, fn, x0, s_dm, b_dm, K=cfg.inner_steps, eta=cfg.eta,
+                c=c, deg=deg_dm, per_step=per_step,
+            )
+            x_cand = x_K  # the primal carry (GPDMM: x_i^{r,0} = x_i^{r-1,K})
+            x_ref = x_bar if cfg.use_avg else x_K  # what the dual flip sees
+        if pmask is not None:
+            sub = pmask[jnp.asarray(dm)]
+            x_cand = jnp.where(sub[:, None], x_cand, x0)
+            x_ref = jnp.where(sub[:, None], x_ref, x0)
+        x = x.at[dm].set(x_cand)
+        x_flip = x.at[dm].set(x_ref)
+
+    if am.size:
+        # f = 0 nodes (star's center): exact closed form x = -s / (c d)
+        x_aux = (-s[am].astype(jnp.float32)
+                 / jnp.asarray(c * topo.deg[am], jnp.float32)[:, None]
+                 ).astype(x.dtype)
+        x = x.at[am].set(x_aux)
+        x_flip = x_flip.at[am].set(x_aux)
+
+    fired_static = np.zeros(topo.n, bool)
+    fired_static[members] = True
+    if pmask is None:
+        slot_static = fired_static[topo.nbr]
+        mask = None if slot_static.all() else jnp.asarray(slot_static, jnp.int32)
+    else:
+        fire_nodes = jnp.concatenate(
+            [jnp.asarray(fired_static[: topo.n_data]) & pmask,
+             jnp.asarray(fired_static[topo.n_data:])]
+        )
+        mask = fire_nodes[jnp.asarray(topo.nbr)].astype(jnp.int32)
+    z = ops.edge_flip(z, x_flip, c, rev=topo.rev, nbr=topo.nbr, sgn=topo.sgn,
+                      mask=mask)
+    return x, z
+
+
+# ---------------------------------------------------------------------------
+# the round
+# ---------------------------------------------------------------------------
+
+def _round(cfg: FederatedConfig, state, fn, batch, per_step_batches=False, *,
+           exact: bool):
+    c = resolved_rho(cfg)
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    x, z = state["x"], state["z"]
+    topo = topo_for(cfg, _n_data_of(cfg, x.shape[0]))
+
+    pmask = None
+    if cfg.participation < 1.0:
+        pmask = T.participation_mask(
+            participation_key(cfg, state["round"]), topo.n_data, cfg.participation
+        )
+
+    if cfg.graph_schedule == "color":
+        phases = topo.colors
+    elif cfg.graph_schedule == "sync":
+        phases = (np.arange(topo.n, dtype=np.int32),)
+    else:
+        raise ValueError(
+            f"unknown graph_schedule {cfg.graph_schedule!r} (color | sync)")
+
+    for members in phases:
+        x, z = _phase(cfg, topo, spec, x, z, fn, batch, per_step_batches,
+                      pmask, c, exact, members)
+
+    # consensus estimate: the aux center's row on a star (== the centralised
+    # x_s), the node mean otherwise
+    est_row = x[topo.n_data] if topo.n_aux else jnp.mean(x, axis=0)
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    consensus = jnp.mean(
+        jnp.sum(jnp.square(xf[jnp.asarray(topo.src)] - xf[jnp.asarray(topo.nbr)]),
+                axis=1)
+    ) * 0.5  # each undirected edge appears in two directed slots
+    new_state = {
+        "x_s": spec.unpack(est_row),
+        "x": x,
+        "z": z,
+        "round": state["round"] + 1,
+    }
+    metrics = {
+        "consensus_err": consensus,
+        "used_arena": jnp.ones((), f32),
+    }
+    return new_state, metrics
+
+
+def _make(cfg: FederatedConfig, *, exact: bool, name: str) -> FedOpt:
+    if cfg.uplink_bits is not None:
+        raise NotImplementedError(
+            "EF21 uplink quantisation integrates ONE cached server view per "
+            "client; graph-PDMM exchanges one directed dual per edge, so a "
+            "per-client integrator does not apply (a per-EDGE integrator is "
+            "future work)"
+        )
+    if not exact and cfg.variance_reduction is not None:
+        raise NotImplementedError(
+            "variance reduction is not wired for graph-PDMM yet "
+            "(snapshot gradients need a per-node consensus reference)"
+        )
+
+    def init(params, m):
+        topo = topo_for(cfg, m)
+        spec = arena.ArenaSpec.from_tree(params)
+        row = spec.pack(params)
+        c = resolved_rho(cfg)
+        return {
+            "x_s": params,
+            "x": jnp.broadcast_to(row[None], (topo.n, spec.width)),
+            "z": edge_duals_init(topo, row, c),
+            "round": jnp.zeros((), jnp.int32),
+        }
+
+    return FedOpt(
+        name=name,
+        init=init,
+        round=partial(_round, cfg, exact=exact),
+        server_params=lambda s: s["x_s"],
+    )
+
+
+def make(cfg: FederatedConfig) -> FedOpt:
+    """Gradient-based graph-PDMM (the decentralized GPDMM analogue)."""
+    return _make(cfg, exact=False, name="gpdmm_graph")
+
+
+def make_exact(cfg: FederatedConfig) -> FedOpt:
+    """Exact (prox-oracle) graph-PDMM; ``round(state, prox_fn, batch)``."""
+    return _make(cfg, exact=True, name="pdmm_graph")

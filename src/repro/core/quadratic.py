@@ -108,17 +108,28 @@ class LeastSquares:
         return prox_one
 
     def make_client_prox(self):
-        """prox_fn(v_i, rho) for core.pdmm / core.fedsplit: the client index
-        is implicit in vmap position, so we close over stacked arrays and let
-        vmap slice them via lexical closure trick (see usage in tests)."""
+        """prox_fn(v_i, rho) for core.pdmm / core.fedsplit / core.pdmm_graph:
+        the client index is implicit in vmap position, so we close over
+        stacked arrays and let vmap slice them via lexical closure trick (see
+        usage in tests).  ``rho`` may be a scalar or a per-client ``(m,)``
+        array -- graph-PDMM's prox weight is c * degree, which varies across
+        nodes on irregular topologies.  ``idx`` (optional STATIC client
+        indices) restricts the evaluation to those clients' data, with
+        ``v_stacked``/``rho`` rows in the same order -- graph-PDMM's
+        color-sequential schedule proxes only the firing subset instead of
+        the full stacking."""
         ev, eV, Atb, reg = self.evals, self.evecs, self.Atb, self.reg
 
-        def stacked_prox(v_stacked, rho):
-            def one(evals, evecs, atb, v):
-                rhs = atb + rho * v
-                return evecs @ ((evecs.T @ rhs) / (evals + reg + rho))
+        def stacked_prox(v_stacked, rho, idx=None):
+            e, V, B = (ev, eV, Atb) if idx is None else (ev[idx], eV[idx], Atb[idx])
+            m = jax.tree.leaves(v_stacked)[0].shape[0]
+            rho_b = jnp.broadcast_to(jnp.asarray(rho, jnp.float32), (m,))
 
-            return jax.vmap(one)(ev, eV, Atb, v_stacked)
+            def one(evals, evecs, atb, v, r):
+                rhs = atb + r * v
+                return evecs @ ((evecs.T @ rhs) / (evals + reg + r))
+
+            return jax.vmap(one)(e, V, B, v_stacked, rho_b)
 
         return stacked_prox
 

@@ -203,8 +203,16 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
 def make(cfg: FederatedConfig) -> FedOpt:
     if cfg.uplink_bits is not None:
         raise NotImplementedError(
-            "SCAFFOLD transmits two coupled variables per direction; the "
-            "single-integrator EF21 uplink quantisation does not apply"
+            "SCAFFOLD+EF21 (uplink_bits is not None) is not supported: each "
+            "SCAFFOLD round uplinks two coupled variables per client -- the "
+            "model delta dx_i = x_i^{r,K} - x_s^r and the control-variate "
+            "delta dc_i = c_i^{r+1} - c_i^r = (x_s^r - x_i^{r,K})/(K eta) - "
+            "c^r.  EF21 integrates ONE error-feedback state u_hat_i per "
+            "client; quantising dx_i alone desynchronises the server's c = "
+            "mean_i c_i invariant, and a second integrator for dc_i is NOT "
+            "error-feedback (dc_i is a function of dx_i, so the two "
+            "quantisation errors are coupled).  Use algorithm='gpdmm' (one "
+            "uplink variable, EF21 supported) or drop uplink_bits."
         )
 
     def init(params, m):

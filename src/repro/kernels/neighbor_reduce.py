@@ -1,0 +1,187 @@
+"""Pallas TPU kernels for the two graph-PDMM hot loops over the edge-dual
+arena (``core.topology``: ``(2|E|, width)`` rows of directed duals z_{i|j},
+128-lane padded like the client arena).
+
+  * ``neighbor_reduce_pallas`` -- the per-node dual sum
+    ``s_i = sum_{j in N(i)} A_{ij} z_{i|j}``: one fused pass over the
+    edge-dual arena that applies the constraint sign and segment-sums each
+    node's contiguous slot range into its offset row.  The topology
+    compiler lays node i's outgoing slots out contiguously
+    (``indptr[i]:indptr[i+1]``), so the reduction is the classic Pallas
+    revisited-output accumulation: the grid walks slots with the node's
+    output block resident in VMEM, zero-initialised at each segment start
+    (``first`` flag) and flushed when the segment id changes.  One read of
+    the dual arena + one write of the (n, width) offsets -- no
+    materialised ``sgn * z`` intermediate, no scatter.
+
+  * ``edge_flip_pallas`` -- PDMM's directed dual exchange
+    ``z_{j|i}' = z_{i|j} + 2 c A_{ij} x_i`` written slot-wise at the
+    RECEIVING slot t = (j|i):
+
+        z'[t] = z[rev[t]] - 2 c sgn[t] x[nbr[t]]
+
+    (``sgn[rev[t]] = -sgn[t]`` and ``src[rev[t]] = nbr[t]``).  The reverse
+    permutation and the x-row gather ride the scalar-prefetch index maps,
+    so the permuted read is free of any materialised ``z[rev]`` copy.  The
+    masked variant (stochastic node firing / color-sequential schedules)
+    keeps z[t] where the sending node did not fire.
+
+Both kernels tile rows as ``(block, 128)`` under the shared 8 MiB VMEM
+budget and block-size conventions of ``round_tail.py``.  Static slot tables
+(seg/first/sgn/rev/nbr) and the dynamic fire mask are scalar-prefetch
+operands (SMEM), read inside index maps and kernel bodies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_update import LANES, assert_vmem_budget
+from repro.kernels.round_tail import _resolve_block, _tile, _untile
+
+
+# ---------------------------------------------------------------------------
+# (a) signed segment-sum of edge-dual rows into per-node offset rows
+# ---------------------------------------------------------------------------
+
+def _reduce_kernel(seg_ref, first_ref, sgn_ref, z_ref, o_ref):
+    t = pl.program_id(1)
+    z = z_ref[0].astype(jnp.float32)
+    contrib = jnp.where(sgn_ref[t] >= 0, z, -z)
+
+    @pl.when(first_ref[t] != 0)
+    def _init():
+        o_ref[0] = contrib.astype(o_ref.dtype)
+
+    @pl.when(first_ref[t] == 0)
+    def _acc():
+        o_ref[0] = (o_ref[0].astype(jnp.float32) + contrib).astype(o_ref.dtype)
+
+
+def neighbor_reduce_pallas(z, seg, first, sgn, n: int, *, block=None,
+                           interpret: bool = False):
+    """z: (2E, width) edge-dual arena; seg/first/sgn: (2E,) int32 static slot
+    tables (segment id = slot owner, segment-start flag, constraint sign).
+    Returns the (n, width) per-node offsets s_i = sum_j A_{ij} z_{i|j}.
+
+    Every node must own at least one slot (connected graphs always do):
+    unvisited output rows would stay undefined.
+    """
+    S, w = z.shape
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(2, br)
+    zt, _, rows_p = _tile(z, br)
+    wb = rows_p // br
+    # lane blocks OUTER, slots inner: consecutive grid steps sharing a
+    # segment revisit the same output block, which therefore stays resident
+    # in VMEM across the whole segment (the accumulation contract)
+    grid = (wb, S)
+    out = pl.pallas_call(
+        _reduce_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, br, LANES), lambda j, t, seg, first, sgn: (t, j, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, br, LANES), lambda j, t, seg, first, sgn: (seg[t], j, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, rows_p, LANES), z.dtype),
+        interpret=interpret,
+    )(jnp.asarray(seg, jnp.int32), jnp.asarray(first, jnp.int32),
+      jnp.asarray(sgn, jnp.int32), zt)
+    return _untile(out, w, (n,))
+
+
+# ---------------------------------------------------------------------------
+# (b) one-pass directed dual flip z'[t] = z[rev[t]] - 2c sgn[t] x[nbr[t]]
+# ---------------------------------------------------------------------------
+
+def _flip_kernel(rev_ref, nbr_ref, sgn_ref, z_ref, x_ref, o_ref, *, c2: float):
+    t = pl.program_id(0)
+    x = x_ref[0].astype(jnp.float32)
+    zr = z_ref[0].astype(jnp.float32)
+    xs = jnp.where(sgn_ref[t] >= 0, -c2 * x, c2 * x)  # -2c sgn[t] x[nbr[t]]
+    o_ref[0] = (zr + xs).astype(o_ref.dtype)
+
+
+def _flip_kernel_masked(rev_ref, nbr_ref, sgn_ref, mask_ref, z_ref, x_ref,
+                        zk_ref, o_ref, *, c2: float):
+    t = pl.program_id(0)
+    x = x_ref[0].astype(jnp.float32)
+    zr = z_ref[0].astype(jnp.float32)
+    zk = zk_ref[0].astype(jnp.float32)
+    xs = jnp.where(sgn_ref[t] >= 0, -c2 * x, c2 * x)  # -2c sgn[t] x[nbr[t]]
+    out = jnp.where(mask_ref[t] != 0, zr + xs, zk)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def edge_flip_pallas(z, x, c, rev, nbr, sgn, mask=None, *, block=None,
+                     interpret: bool = False):
+    """z: (2E, width); x: (n, width) node rows; rev/nbr/sgn: (2E,) int32
+    static slot tables; mask: optional (2E,) int32 (1 = the SENDING node
+    ``nbr[t]`` fired this phase, flip; 0 = keep z[t]).  Returns the new
+    (2E, width) edge-dual arena.  Both gathers (z[rev[t]], x[nbr[t]]) ride
+    the scalar-prefetch index maps -- no permuted copy is materialised."""
+    S, w = z.shape
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(3 if mask is None else 5, br)
+    zt, _, rows_p = _tile(z, br)
+    xt, _, _ = _tile(x, br)
+    wb = rows_p // br
+    grid = (S, wb)
+    out_sds = jax.ShapeDtypeStruct((S, rows_p, LANES), z.dtype)
+    rev = jnp.asarray(rev, jnp.int32)
+    nbr = jnp.asarray(nbr, jnp.int32)
+    sgn = jnp.asarray(sgn, jnp.int32)
+    if mask is None:
+        return _untile(
+            pl.pallas_call(
+                functools.partial(_flip_kernel, c2=2.0 * float(c)),
+                grid_spec=pltpu.PrefetchScalarGridSpec(
+                    num_scalar_prefetch=3,
+                    grid=grid,
+                    in_specs=[
+                        pl.BlockSpec((1, br, LANES),
+                                     lambda t, j, rev, nbr, sgn: (rev[t], j, 0)),
+                        pl.BlockSpec((1, br, LANES),
+                                     lambda t, j, rev, nbr, sgn: (nbr[t], j, 0)),
+                    ],
+                    out_specs=pl.BlockSpec(
+                        (1, br, LANES), lambda t, j, rev, nbr, sgn: (t, j, 0)
+                    ),
+                ),
+                out_shape=out_sds,
+                interpret=interpret,
+            )(rev, nbr, sgn, zt, xt),
+            w, (S,),
+        )
+    return _untile(
+        pl.pallas_call(
+            functools.partial(_flip_kernel_masked, c2=2.0 * float(c)),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=4,
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec((1, br, LANES),
+                                 lambda t, j, rev, nbr, sgn, mk: (rev[t], j, 0)),
+                    pl.BlockSpec((1, br, LANES),
+                                 lambda t, j, rev, nbr, sgn, mk: (nbr[t], j, 0)),
+                    pl.BlockSpec((1, br, LANES),
+                                 lambda t, j, rev, nbr, sgn, mk: (t, j, 0)),
+                ],
+                out_specs=pl.BlockSpec(
+                    (1, br, LANES), lambda t, j, rev, nbr, sgn, mk: (t, j, 0)
+                ),
+            ),
+            out_shape=out_sds,
+            interpret=interpret,
+        )(rev, nbr, sgn, jnp.asarray(mask, jnp.int32), zt, xt, zt),
+        w, (S,),
+    )

@@ -451,6 +451,69 @@ def ef21_update(u, u_hat, bits: int, leaf_rows, *, impl: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
+# graph-PDMM neighbor reduce + directed dual flip over the edge-dual arena
+# (core.topology layout: (2|E|, width) directed duals, width % 128 == 0)
+# ---------------------------------------------------------------------------
+
+def neighbor_reduce(z, *, seg, first, sgn, n: int,
+                    impl: Optional[str] = None, block: Optional[int] = None):
+    """Per-node dual offsets s_i = sum_{j in N(i)} A_{ij} z_{i|j}.
+
+    z: (2E, width) edge-dual arena; seg/first/sgn: (2E,) static slot tables
+    (``Topology``: segment id = slot owner, segment-start flag, constraint
+    sign).  Node i's slots are contiguous, so the XLA reference is a sorted
+    segment-sum; the Pallas kernel fuses the sign apply + reduction into one
+    pass with the output row resident in VMEM across each segment."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        zf = z.astype(jnp.float32)
+        signed = jnp.where(jnp.asarray(sgn)[:, None] >= 0, zf, -zf)
+        out = jax.ops.segment_sum(
+            signed, jnp.asarray(seg), num_segments=n, indices_are_sorted=True
+        )
+        return out.astype(z.dtype)
+    from repro.kernels import neighbor_reduce as nr
+
+    return nr.neighbor_reduce_pallas(
+        z, seg, first, sgn, n, block=block,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def edge_flip(z, x, c, *, rev, nbr, sgn, mask=None,
+              impl: Optional[str] = None, block: Optional[int] = None):
+    """PDMM's directed dual exchange, written at the receiving slot:
+
+        z'[slot(j|i)] = z[slot(i|j)] + 2 c A_{ij} x_i
+                      = z[rev[t]] - 2 c sgn[t] x[nbr[t]]
+
+    (A_{ij} here carries i = nbr[t], j = src[t], so A_{ij} = sgn[rev[t]] =
+    -sgn[t].)
+
+    z: (2E, width); x: (n, width) node-primal rows; rev/nbr/sgn: (2E,)
+    static slot tables.  ``mask`` (optional (2E,) bool/int, 1 = the sending
+    node ``nbr[t]`` fired) keeps z[t] at silent slots -- the stochastic
+    node-firing / color-schedule variant.  One pass; both gathers ride the
+    Pallas scalar-prefetch index maps (no materialised z[rev] copy)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        zf = z.astype(jnp.float32)
+        flip = (zf[jnp.asarray(rev)]
+                - (2.0 * c) * jnp.asarray(sgn, jnp.float32)[:, None]
+                * x.astype(jnp.float32)[jnp.asarray(nbr)])
+        if mask is not None:
+            flip = jnp.where(jnp.asarray(mask)[:, None] != 0, flip, zf)
+        return flip.astype(z.dtype)
+    from repro.kernels import neighbor_reduce as nr
+
+    return nr.edge_flip_pallas(
+        z, x, c, rev, nbr, sgn,
+        mask=None if mask is None else jnp.asarray(mask, jnp.int32),
+        block=block, interpret=(impl == "pallas_interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
 # rg-lru recurrence
 # ---------------------------------------------------------------------------
 

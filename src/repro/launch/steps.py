@@ -140,6 +140,15 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
     # c stay pytrees under the per-leaf parameter shardings.
     cax = sh.client_axes(mesh) if layout == "client_axis" else None
     arena_shard = NamedSharding(mesh, P(cax, None))
+    cax_size = sh.axis_size(mesh, cax) if cax else 1
+
+    def rows_shard(v):
+        # graph-PDMM arenas: the node-primal (n, width) and edge-dual
+        # (2|E|, width) row counts follow the topology, not m -- shard the
+        # row dim over the client axes only when it divides evenly (a star's
+        # m + 1 node rows don't), else replicate (both are small relative to
+        # the m-stacked client state)
+        return arena_shard if cax and v.shape[0] % cax_size == 0 else rep
 
     def state_shardings(shapes):
         out = {}
@@ -148,6 +157,8 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
                 out[k] = p_shard
             elif k in ("lam_s", "x_c", "c_i", "z_s", "u_hat"):
                 out[k] = arena_shard if isinstance(v, jax.ShapeDtypeStruct) else stacked
+            elif k in ("x", "z"):  # graph-PDMM node/edge-dual arenas
+                out[k] = rows_shard(v)
             else:  # round counter etc.
                 out[k] = jax.tree.map(lambda _: rep, v)
         return out

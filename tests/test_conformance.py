@@ -381,3 +381,19 @@ def test_scaffold_round_preserves_padding(params, m, k):
     assert np.all(np.asarray(s["c_i"], np.float32)[:, pad_mask] == 0.0)
     assert np.all(np.asarray(spec.pack(s["x_s"]), np.float32)[pad_mask] == 0.0)
     assert np.all(np.asarray(spec.pack(s["c"]), np.float32)[pad_mask] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD+EF21 contract (ISSUE 4 satellite): rejected loudly, with the two
+# coupled uplink variables named -- pinned so the message can't silently rot
+# ---------------------------------------------------------------------------
+
+def test_scaffold_ef21_rejection_names_coupled_uplinks():
+    with pytest.raises(NotImplementedError) as exc:
+        make(FederatedConfig(algorithm="scaffold", uplink_bits=8))
+    msg = str(exc.value)
+    # the two coupled uplink variables, by name
+    assert "dx_i = x_i^{r,K} - x_s^r" in msg
+    assert "dc_i = c_i^{r+1} - c_i^r" in msg
+    # and the actionable way out
+    assert "gpdmm" in msg and "uplink_bits" in msg

@@ -82,3 +82,45 @@ def test_sharded_round_matches_single_device(prob, algo):
         np.testing.assert_allclose(
             np.asarray(sh_metrics[k]), np.asarray(ref_metrics[k]),
             atol=1e-4, rtol=1e-3, err_msg=f"{algo}: metrics[{k}]")
+
+
+def test_sharded_ring_topology_round_matches_single_device(prob):
+    """ISSUE 4: one gradient graph-PDMM round on a RING with the node-primal
+    (m, width) and edge-dual (2m, width) arenas sharded over the 8-device
+    data axis must match the single-device round at f32 resolution.  The
+    neighbor reduce and the dual flip gather across shard boundaries (every
+    node's neighbors live on other devices), so this exercises the
+    collectives XLA inserts around the edge-dual arena."""
+    cfg = FederatedConfig(algorithm="gpdmm_graph", topology="ring",
+                          inner_steps=2, eta=0.5 / prob.L, use_arena=True)
+    opt = make(cfg)
+    grad = prob.oracle()
+    batch = prob.batch()
+    state = opt.init(jnp.zeros((prob.d,)), M)
+
+    dev0 = jax.devices()[0]
+    ref_state, ref_metrics = jax.jit(lambda s, b: opt.round(s, grad, b))(
+        jax.device_put(state, dev0), jax.device_put(batch, dev0))
+
+    mesh = make_smoke_mesh(8, 1)
+
+    def put(x):
+        # rows over the data axis whenever they divide the 8-way axis: the
+        # m node rows AND the 2m directed-dual rows (steps.py rows_shard)
+        rows = x.ndim >= 1 and x.shape[0] >= M and x.shape[0] % M == 0
+        spec = P("data", *([None] * (x.ndim - 1))) if rows else P(*([None] * x.ndim))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    sh_state, sh_metrics = jax.jit(lambda s, b: opt.round(s, grad, b))(
+        jax.tree.map(put, state), jax.tree.map(put, batch))
+
+    assert set(ref_state) == set(sh_state)
+    for k in sorted(ref_state):
+        for i, (gl, wl) in enumerate(zip(jax.tree.leaves(sh_state[k]),
+                                         jax.tree.leaves(ref_state[k]))):
+            np.testing.assert_allclose(
+                np.asarray(gl), np.asarray(wl), atol=1e-4, rtol=1e-4,
+                err_msg=f"ring: state[{k}] leaf {i}")
+    np.testing.assert_allclose(
+        np.asarray(sh_metrics["consensus_err"]),
+        np.asarray(ref_metrics["consensus_err"]), atol=1e-4, rtol=1e-3)
