@@ -19,5 +19,25 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
+def time_round_donated(round_fn, state, iters: int = 5, warmup: int = 2) -> float:
+    """Median us/round of a donated steady-state round chain: the state is
+    consumed and rebound every call (``state = fn(state)``), exactly how the
+    launchers drive rounds.  Donation is what lets in-place updates (the
+    cohort engine's row scatter) actually alias instead of copying the
+    population buffer -- ``time_fn`` cannot donate because it re-passes the
+    same arguments."""
+    fn = jax.jit(round_fn, donate_argnums=(0,))
+    for _ in range(warmup):
+        state = fn(state)
+    state = jax.block_until_ready(state)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state = jax.block_until_ready(fn(state))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")

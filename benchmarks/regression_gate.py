@@ -8,7 +8,9 @@ path=arena), per problem shape / oracle / driver -- regresses more than
 paper's primary baseline); AGPDMM and FedAvg joined with ISSUE 4, so every
 algorithm the paper's figures compare now has its arena hot path guarded --
 a regression in any one of them would silently skew the cross-algorithm
-wall-time story.
+wall-time story.  ISSUE 5 adds the (gpdmm, partial, arena_cohort) cell: the
+cohort-sampled partial-participation round whose whole point is being
+cheaper than the masked full-population round.
 
 Hardware neutrality: the committed baseline was produced on a different
 machine than the CI runner, and absolute wall times swing with runner
@@ -42,6 +44,10 @@ GATED = [
     {"algo": "agpdmm", "variant": "plain", "path": "arena"},
     {"algo": "scaffold", "variant": "plain", "path": "arena"},
     {"algo": "fedavg", "variant": "plain", "path": "arena"},
+    # ISSUE 5: the cohort-sampled partial-participation round (gather ->
+    # fused cohort inner loop -> scatter); normalised by the same-run pytree
+    # partial sibling like every arena cell
+    {"algo": "gpdmm", "variant": "partial", "path": "arena_cohort"},
 ]
 # "topology" (ISSUE 4) distinguishes the gpdmm_graph rows (star/ring/
 # complete at the same problem shape); records predating it key as None

@@ -46,9 +46,10 @@ import pathlib
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, time_round_donated
 from repro.configs.base import FederatedConfig
 from repro.core import arena, make, make_oracle, make_scan_rounds, pdmm_graph
+from repro.core.tree_util import cohort_count
 from repro.kernels import ops
 
 PROBLEMS = {
@@ -70,7 +71,11 @@ PROBLEMS = {
 VARIANTS = {
     "plain": {},
     "ef21": {"uplink_bits": 8},
-    "partial": {"participation": 0.5},
+    # cohort=False pins the matrix's partial cells to the MASKED
+    # full-population round (cohort='auto' would silently reroute the arena
+    # cells onto the ISSUE 5 cohort engine, mislabeling path/hbm_passes);
+    # the cohort engine has its own bench_cohort rows at path=arena_cohort
+    "partial": {"participation": 0.5, "cohort": False},
 }
 
 # ISSUE 3: SCAFFOLD/FedAvg join the matrix so the paper's cross-algorithm
@@ -272,6 +277,76 @@ def bench_round(problem: str, algo: str, variant: str, K: int = 4):
     return records
 
 
+# ISSUE 5: cohort-sampled round engine rows -- us/round vs participation at
+# fixed m on the lm_flat shape.  The masked path (path=arena) runs the K-step
+# inner loop over ALL m rows and discards the silent results at the tail, so
+# its wall time is flat in the participation; the cohort engine
+# (path=arena_cohort) gathers the active rows, runs the same fused kernels on
+# the (m_active, width) cohort buffer, and scatters back -- its inner-loop
+# cost scales with the cohort.  The participation=0.5 cohort cell keys as
+# variant=partial (joining the regression gate next to the masked cells the
+# matrix above times); the sweep cells key as partial25 / partial10.
+COHORT_PARTS = (0.5, 0.25, 0.1)
+
+
+def cohort_round_passes(K: int, m: int, m_active: int) -> float:
+    """Analytic full-(m, N) passes of the gpdmm cohort round: cohort-sized
+    work at fraction f = m_active / m (2x2 row gathers of lam/x_c, 5K fused
+    inner steps, the 4-pass round tail, 2x2 row scatters of u_hat/x_c), plus
+    the inherent O(m) tail -- the server mean over the scattered u_hat (1r)
+    and the full dual refresh (1r + 1w)."""
+    f = m_active / m
+    return f * (2 * 2 + 5 * K + 4 + 2 * 2) + 3
+
+
+def bench_cohort(problem: str = "lm_flat", K: int = 4):
+    jax.clear_caches()
+    spec = PROBLEMS[problem]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    n = sum(int(jnp.size(v)) for v in params.values())
+    batch = {"dummy": jnp.zeros((m, 1))}
+    records = []
+    for part in COHORT_PARTS:
+        variant = "partial" if part == 0.5 else f"partial{int(part * 100)}"
+        mc = cohort_count(m, part)
+        cell_us = {}
+        for cohort, path in ((False, "arena"), (True, "arena_cohort")):
+            if part == 0.5 and not cohort:
+                # the main matrix already times (gpdmm, partial, arena)
+                continue
+            cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=0.1,
+                                  use_arena=True, participation=part,
+                                  cohort=cohort)
+            opt = make(cfg)
+            # fresh param copy per cell: state["x_s"] aliases params, and
+            # the donated round chain consumes its state
+            state = opt.init(jax.tree.map(jnp.copy, params), m)
+            # donated steady-state timing for BOTH paths: donation is what
+            # lets the cohort scatter alias the population buffer in place
+            # (the launchers donate; time_fn cannot), and the masked round
+            # must be timed under the same contract for the ratio to mean
+            # anything
+            us = time_round_donated(
+                lambda s: opt.round(s, _native_grad, batch)[0], state)
+            cell_us[path] = us
+            passes = (cohort_round_passes(K, m, mc) if cohort else
+                      round_passes("gpdmm", "partial", K, arena=True,
+                                   multi_leaf=len(spec["shapes"]) > 1,
+                                   oracle="native"))
+            rec = _record(problem, "gpdmm", variant, path, "native",
+                          "per_round", m, n, K, us, passes)
+            rec["participation"] = part
+            rec["m_active"] = mc
+            records.append(rec)
+        if "arena" in cell_us:
+            print(f"  -> {problem}/gpdmm/{variant}: cohort {mc}/{m} rows, "
+                  f"masked {cell_us['arena']:.0f} -> cohort "
+                  f"{cell_us['arena_cohort']:.0f} us/round "
+                  f"(x{cell_us['arena'] / cell_us['arena_cohort']:.1f})")
+    return records
+
+
 # ISSUE 4: decentralized graph-PDMM rows -- ring vs star vs complete at the
 # LM-scale flat shape.  One graph round = (per firing phase) the fused
 # neighbor reduce over the (2E, width) edge-dual arena, the K-step inner
@@ -358,9 +433,18 @@ def run(out_path: str = "BENCH_round.json"):
         for algo, variants in ALGO_VARIANTS.items():
             for variant in variants:
                 trajectory.extend(bench_round(problem, algo, variant))
+    trajectory.extend(bench_cohort())
     trajectory.extend(bench_topology())
     payload = {
         "bench": "round_bench",
+        "cohort_note": "gpdmm partial/partial25/partial10 rows at "
+                "path=arena_cohort (ISSUE 5) run the cohort-sampled round "
+                "engine (gather active rows -> fused cohort inner loop -> "
+                "scatter back); the paired path=arena rows are the masked "
+                "full-population rounds at the same participation, so the "
+                "ratio shows compute scaling with the cohort, not the "
+                "population.  participation / m_active columns record the "
+                "sweep; the partial (0.5) cohort cell is regression-gated.",
         "topology_note": "gpdmm_graph rows (ISSUE 4) run the decentralized "
                 "graph-PDMM round (core.pdmm_graph) at the lm_flat shape; "
                 "the topology column names the consensus graph.  The "

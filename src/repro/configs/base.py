@@ -85,6 +85,27 @@ class FederatedConfig:
     # x_s) for ALL i from what it holds -- so the KKT invariant (25) survives
     # partial rounds exactly.  1.0 = every client every round (paper-faithful).
     participation: float = 1.0
+    # Cohort-sampled round engine (ISSUE 5).  With ``participation < 1`` the
+    # masked path still runs the K-step inner loop over ALL m client rows and
+    # only discards silent clients at the tail, so compute is O(m) even when
+    # 1% of clients fire.  The cohort engine instead GATHERS the round's
+    # active rows out of the population arena, runs the fused inner loop and
+    # round tail on the (m_active, width) cohort buffer, and SCATTERS the
+    # updated rows back -- the server mean becomes
+    # (sum_active uplink + sum_silent u_hat) / m, computed as one mean over
+    # the scattered population buffer so it matches the masked path
+    # row-for-row (tests/test_cohort.py).  "auto" (default) engages whenever
+    # the round runs on the arena with participation < 1 and the cohort is
+    # strictly smaller than the population; True forces it (when the arena
+    # path is taken), False keeps the masked full-population path.  The
+    # engine is arena-only: the pytree path always masks.
+    cohort: bool | str = "auto"
+    # Runs the cohort inner loop in fixed-size tiles via ``lax.map`` so peak
+    # live inner-loop state (notably the (tile, W, W) affine H blocks and the
+    # per-step gradient temporaries) is O(tile) instead of O(m_active) --
+    # what makes ~10^5-10^6-row population arenas with small cohorts feasible
+    # on one host.  Must divide the cohort size; None = one shot.
+    cohort_tile: Optional[int] = None
     # Seed for the participation RNG (folded with the round counter).  One
     # config field instead of a constant duplicated per algorithm, so two
     # algorithms under comparison draw IDENTICAL mask sequences by contract
@@ -141,6 +162,18 @@ class FederatedConfig:
     # snapshot gradient at the round's server estimate.  None = plain
     # stochastic gradients (paper-faithful).
     variance_reduction: Optional[str] = None
+
+    def __post_init__(self):
+        if not (0.0 < self.participation <= 1.0):
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}")
+        if self.cohort not in (True, False, "auto"):
+            raise ValueError(
+                f"cohort must be True, False or 'auto', got {self.cohort!r}")
+        if self.cohort_tile is not None and self.cohort_tile < 1:
+            raise ValueError(
+                f"cohort_tile must be a positive tile size or None, got "
+                f"{self.cohort_tile}")
 
 
 # ---------------------------------------------------------------------------

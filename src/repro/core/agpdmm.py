@@ -26,12 +26,49 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, resolved_rho, use_arena
+from repro.core.api import (
+    FedOpt, cohort_batch, resolved_rho, run_cohort_inner, use_arena,
+    use_cohort,
+)
 from repro.core.gpdmm import (
-    arena_metrics, arena_tail, inner_steps, inner_steps_arena,
+    arena_metrics, arena_tail, cohort_tail, inner_steps, inner_steps_arena,
     participation_key,
 )
 from repro.kernels import ops
+
+
+def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    """AGPDMM round over the sampled cohort (see gpdmm._round_arena_cohort):
+    only lam_s rows gather/scatter -- the client init is the fresh server
+    row, so there is no primal carry to move at all."""
+    rho = resolved_rho(cfg)
+    K = cfg.inner_steps
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    lam = state["lam_s"]
+    m = lam.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+    idx, _mask = T.cohort_indices(
+        participation_key(cfg, state["round"]), m, cfg.participation
+    )
+    lam_c = ops.row_gather(lam, idx)
+    batch_c = cohort_batch(batch, idx, m, per_step_batches)
+
+    def inner(rows, b):
+        (lam_t,) = rows
+        x0 = jnp.broadcast_to(x_s_row[None], lam_t.shape)
+        return inner_steps_arena(
+            spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta, rho=rho,
+            per_step=per_step_batches,
+            vr_snapshot=x0 if cfg.variance_reduction == "svrg" else None,
+        )
+
+    x_K, _ = run_cohort_inner(cfg, inner, (lam_c,), batch_c,
+                              per_step=per_step_batches)
+
+    _, uplink = ops.round_tail(x_K, lam_c, x_s_row, rho, with_lam_is=False)
+    new_state = cohort_tail(cfg, spec, state, uplink, idx)
+    new_state |= {"round": state["round"] + 1}
+    return new_state, arena_metrics(new_state["lam_s"], x_K, x_s_row)
 
 
 def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
@@ -43,6 +80,8 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     spec = arena.ArenaSpec.from_tree(state["x_s"])
     lam = state["lam_s"]
     m = lam.shape[0]
+    if use_cohort(cfg, m):
+        return _round_arena_cohort(cfg, state, grad_fn, batch, per_step_batches)
     x_s_row = spec.pack(state["x_s"])
     x0 = jnp.broadcast_to(x_s_row[None], (m, spec.width))
 
@@ -53,13 +92,13 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     )
 
     _, uplink = ops.round_tail(x_K, lam, x_s_row, rho, with_lam_is=False)
-    new_state, x_s_new, lam_s_new, _ = arena_tail(cfg, spec, state, uplink, m)
+    new_state, x_s_new, lam_s_new, mask = arena_tail(cfg, spec, state, uplink, m)
     new_state |= {
         "x_s": spec.unpack(x_s_new),
         "lam_s": lam_s_new,
         "round": state["round"] + 1,
     }
-    return new_state, arena_metrics(lam_s_new, x_K, x_s_row)
+    return new_state, arena_metrics(lam_s_new, x_K, x_s_row, mask)
 
 
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
@@ -80,6 +119,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     lam_is = T.tmap(lambda s, xk, l: rho * (s - xk) - l, x_s_b, x_K, lam_s)
     uplink = T.tmap(lambda xk, l: xk - l / rho, x_K, lam_is)
     new_state = {}
+    mask = None
     if cfg.uplink_bits is not None:  # beyond-paper: EF21 delta-quantised uplink
         uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
     if cfg.participation < 1.0:  # beyond-paper: async PDMM (partial rounds)
@@ -97,7 +137,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     new_state |= {"x_s": x_s_new, "lam_s": lam_s_new, "round": state["round"] + 1}
     metrics = {
         "lam_sum_norm": T.tree_norm(T.tree_client_sum(lam_s_new)),
-        "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        # silent clients' x_K never enters the state: average the active set
+        "client_drift": T.masked_client_mean(
+            T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
     return new_state, metrics

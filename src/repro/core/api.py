@@ -149,6 +149,120 @@ def affine_case(grad_fn, spec, *, per_step=False, vr_snapshot=None):
     return affine if ops.affine_inner_fits(spec.width) else None
 
 
+# ---------------------------------------------------------------------------
+# cohort-sampled round engine (shared gather/scatter + mask plumbing)
+# ---------------------------------------------------------------------------
+#
+# With ``participation < 1`` the masked round still pays O(m_total): every
+# client row runs the fused K-step inner loop and the silent results are
+# discarded at the tail.  The cohort engine (ISSUE 5) gathers the round's
+# active rows out of the population arena, runs the SAME fused kernels on the
+# (m_active, width) cohort buffer, and scatters the updated rows back; the
+# server mean is taken over the scattered population buffer, which makes it
+# the documented (sum_active uplink + sum_silent u_hat) / m identity and
+# keeps it bit-identical to the masked path's mean-of-selected-rows.  The
+# helpers below are the cross-algorithm plumbing; the per-algorithm cohort
+# rounds live next to their masked siblings in gpdmm/agpdmm/scaffold/fedavg.
+
+
+# algorithms with a cohort round implementation (the four arena rounds);
+# fedsplit and the graph subsystem keep their previous participation
+# semantics, so the launchers must never shrink their batches
+COHORT_ALGOS = ("gpdmm", "agpdmm", "scaffold", "fedavg")
+
+
+def use_cohort(cfg: FederatedConfig, m: int) -> bool:
+    """Static policy: does this round run the cohort-sampled engine?
+
+    Callers are the ARENA rounds of the four ``COHORT_ALGOS`` (the pytree
+    path always masks -- a per-leaf gather/scatter would re-materialise the
+    tree per round), plus the launchers deciding batch sizing -- hence the
+    algorithm/topology guard lives HERE, not in the callers.  With
+    ``cohort="auto"`` the engine engages whenever participation < 1 and the
+    cohort is strictly smaller than the population (gathering all rows would
+    add two copies for nothing); ``True`` forces it, ``False`` keeps the
+    masked full-population path (the conformance oracle)."""
+    # truthiness, not identity: validation admits cohort=0/1 (int spellings
+    # of the bools, e.g. from a JSON config layer) and 0 must mean False
+    if cfg.participation >= 1.0 or not cfg.cohort:
+        return False
+    if cfg.algorithm not in COHORT_ALGOS or cfg.topology != "star":
+        return False
+    if cfg.cohort == "auto":
+        from repro.core import tree_util as T
+
+        return T.cohort_count(m, cfg.participation) < m
+    return True
+
+
+def cohort_batch(batch, idx, m: int, per_step: bool):
+    """Resolve the cohort's gradient batch.  Population-sized batch leaves
+    (client dim == m) are row-gathered by ``idx``; leaves already sized to
+    the cohort (a cohort-aware data stream, rows sorted by client id --
+    ``tree_util.cohort_indices``'s order) pass through untouched, so at
+    population scale no one has to materialise batches for silent clients.
+    The client dim is axis 0, or axis 1 for per-step ``(K, m, ...)``
+    batches.  Static decision (shapes only)."""
+    axis = 1 if per_step else 0
+    mc = idx.shape[0]
+
+    def one(x):
+        if x.shape[axis] == mc and mc != m:
+            return x
+        if x.shape[axis] != m:
+            # a hard error, not an assert: under python -O an assert
+            # vanishes and jnp.take's clamped gather would silently train
+            # on duplicated rows
+            raise ValueError(
+                f"batch leaf client dim {x.shape[axis]} matches neither the "
+                f"population ({m}) nor the cohort ({mc})")
+        return jnp.take(x, idx, axis=axis)
+
+    return jax.tree.map(one, batch)
+
+
+def map_cohort_tiles(tile: int, fn, rows: tuple, batch, *, per_step: bool = False):
+    """Run ``fn(rows_tile, batch_tile)`` over fixed-size tiles of the cohort
+    via ``lax.map`` so peak live inner-loop state (the (tile, W, W) affine H
+    blocks, per-step gradient temporaries) is O(tile), not O(m_active).
+
+    ``rows``: tuple of ``(m_active, ...)`` arrays sliced along dim 0 (may be
+    empty -- FedAvg carries no per-client rows; the tile count then comes
+    from the batch).  ``batch`` leaves carry the client dim at axis 0 (or 1
+    when ``per_step``).  ``fn`` returns any pytree of ``(tile, ...)`` arrays;
+    outputs come back concatenated to ``(m_active, ...)``.  ``tile`` must
+    divide the cohort size (checked; both are static)."""
+    lead = [r.shape[0] for r in rows] or [
+        jax.tree.leaves(batch)[0].shape[1 if per_step else 0]]
+    mc = lead[0]
+    if mc % tile:
+        raise ValueError(f"cohort_tile={tile} must divide the cohort size {mc}")
+    n = mc // tile
+    rows_t = tuple(r.reshape((n, tile) + r.shape[1:]) for r in rows)
+
+    def resh_batch(x):
+        if per_step:  # (K, mc, ...) -> (n, K, tile, ...)
+            k = x.shape[0]
+            return jnp.moveaxis(x.reshape((k, n, tile) + x.shape[2:]), 1, 0)
+        return x.reshape((n, tile) + x.shape[1:])
+
+    batch_t = jax.tree.map(resh_batch, batch)
+    out = jax.lax.map(lambda ab: fn(ab[0], ab[1]), (rows_t, batch_t))
+    return jax.tree.map(lambda y: y.reshape((mc,) + y.shape[2:]), out)
+
+
+def run_cohort_inner(cfg: FederatedConfig, fn, rows: tuple, batch, *,
+                     per_step: bool = False):
+    """Dispatch the cohort inner loop: tiled (``cfg.cohort_tile``) when the
+    knob is set and smaller than the cohort, else one shot."""
+    lead = [r.shape[0] for r in rows] or [
+        jax.tree.leaves(batch)[0].shape[1 if per_step else 0]]
+    tile = cfg.cohort_tile
+    if tile is not None and tile < lead[0]:
+        return map_cohort_tiles(tile, fn, rows, batch, per_step=per_step)
+    return fn(rows, batch)
+
+
 def resolved_rho(cfg: FederatedConfig) -> float:
     """The paper's default rho = 1/(K * eta) (matched to SCAFFOLD's scaling)."""
     return cfg.rho if cfg.rho is not None else 1.0 / (cfg.inner_steps * cfg.eta)

@@ -21,7 +21,9 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, use_arena
+from repro.core.api import (
+    FedOpt, cohort_batch, run_cohort_inner, use_arena, use_cohort,
+)
 from repro.core.gpdmm import participation_key
 from repro.core.scaffold import inner_steps_plain_arena
 from repro.kernels import ops
@@ -38,10 +40,59 @@ def _num_clients(state, batch, per_step_batches):
     return b0.shape[1] if per_step_batches else b0.shape[0]
 
 
+def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    """FedAvg round over the sampled cohort (see gpdmm._round_arena_cohort):
+    no per-client optimiser rows move at all -- the cohort runs the plain
+    K-step loop from the server row, the uplink scatters into the
+    arena-resident u_hat cache, and the server mean over the scattered
+    buffer realises (sum_active x_K + sum_silent u_hat) / m exactly as the
+    masked path's mean-of-selected-rows."""
+    K, eta = cfg.inner_steps, cfg.eta
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    u_hat = state["u_hat"]  # guaranteed: participation < 1 carries the cache
+    m = u_hat.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+    idx, _mask = T.cohort_indices(
+        participation_key(cfg, state["round"]), m, cfg.participation
+    )
+    batch_c = cohort_batch(batch, idx, m, per_step_batches)
+
+    def inner(_rows, b):
+        mc = jax.tree.leaves(b)[0].shape[1 if per_step_batches else 0]
+        x0 = jnp.broadcast_to(x_s_row[None], (mc, spec.width))
+        return inner_steps_plain_arena(
+            spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+            per_step=per_step_batches,
+        )
+
+    x_K = run_cohort_inner(cfg, inner, (), batch_c, per_step=per_step_batches)
+
+    uplink = x_K
+    if cfg.uplink_bits is not None:  # EF21 on the cohort's cached rows only
+        uplink = ops.ef21_update(uplink, ops.row_gather(u_hat, idx),
+                                 cfg.uplink_bits, spec.leaf_rows())
+    u_hat_new = ops.row_scatter(u_hat, idx, uplink)
+    x_s_new = jnp.mean(u_hat_new, axis=0)  # <- the round's single all-reduce
+    new_state = {
+        "u_hat": u_hat_new,
+        "x_s": spec.unpack(x_s_new),
+        "round": state["round"] + 1,
+    }
+    f32 = jnp.float32
+    metrics = {
+        "client_drift": jnp.mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        "used_arena": jnp.ones((), f32),
+    }
+    return new_state, metrics
+
+
 def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     K, eta = cfg.inner_steps, cfg.eta
     spec = arena.ArenaSpec.from_tree(state["x_s"])
     m = _num_clients(state, batch, per_step_batches)
+    if use_cohort(cfg, m):
+        return _round_arena_cohort(cfg, state, grad_fn, batch, per_step_batches)
     x_s_row = spec.pack(state["x_s"])
     x0 = jnp.broadcast_to(x_s_row[None], (m, spec.width))
 
@@ -51,6 +102,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
 
     uplink = x_K
     new_state = {}
+    mask = None
     u_hat = state.get("u_hat")  # arena-resident (m, width) or absent
     if cfg.uplink_bits is not None:  # fused EF21: 2 passes instead of ~4
         uplink = ops.ef21_update(uplink, u_hat, cfg.uplink_bits, spec.leaf_rows())
@@ -66,8 +118,10 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     new_state |= {"x_s": spec.unpack(x_s_new), "round": state["round"] + 1}
     f32 = jnp.float32
     metrics = {
-        "client_drift": jnp.mean(
-            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        # silent clients' x_K never enters the state: average the active set
+        "client_drift": T.masked_client_mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1),
+            mask),
         "used_arena": jnp.ones((), f32),
     }
     return new_state, metrics
@@ -96,6 +150,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
 
     uplink = x_K
     new_state = {}
+    mask = None
     if cfg.uplink_bits is not None:  # beyond-paper: EF21 delta-quantised uplink
         uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
     if cfg.participation < 1.0:
@@ -108,7 +163,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     x_s_new = T.tree_client_mean(uplink)
     new_state |= {"x_s": x_s_new, "round": state["round"] + 1}
     metrics = {
-        "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        # silent clients' x_K never enters the state: average the active set
+        "client_drift": T.masked_client_mean(
+            T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
     return new_state, metrics

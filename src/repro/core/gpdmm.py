@@ -31,7 +31,10 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, affine_case, arena_grad, resolved_rho, use_arena
+from repro.core.api import (
+    FedOpt, affine_case, arena_grad, cohort_batch, resolved_rho,
+    run_cohort_inner, use_arena, use_cohort,
+)
 from repro.kernels import ops
 
 
@@ -163,19 +166,96 @@ def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
     return new_state, x_s_new, lam_s_new, mask
 
 
-def arena_metrics(lam_s_new, x_K, x_s_row):
+def arena_metrics(lam_s_new, x_K, x_s_row, mask=None):
     """KKT-invariant and drift metrics straight off the arena buffers;
-    padding columns are identically zero, so no masking is needed.
-    ``used_arena`` records the (static) layout decision so benches can see
-    which path a round actually ran."""
+    padding columns are identically zero, so no masking is needed there.
+    ``client_drift`` averages over the ACTIVE cohort only (``mask``, or all
+    rows of ``x_K`` when None -- the cohort path passes its already-gathered
+    x_K): silent clients' x_K is computed-then-discarded on the masked path
+    (the carry is kept), so averaging it in reported movement that never
+    entered the state.  ``used_arena`` records the (static) layout decision
+    so benches can see which path a round actually ran."""
     f32 = jnp.float32
     return {
         "lam_sum_norm": jnp.linalg.norm(jnp.sum(lam_s_new.astype(f32), axis=0)),
-        "client_drift": jnp.mean(
-            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)
+        "client_drift": T.masked_client_mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1), mask
         ),
         "used_arena": jnp.ones((), f32),
     }
+
+
+def cohort_tail(cfg: FederatedConfig, spec, state, uplink, idx):
+    """Shared GPDMM/AGPDMM cohort round tail (the cohort sibling of
+    ``arena_tail``): fused EF21 against the cohort's cached ``u_hat`` rows,
+    the scatter into the population cache, the scattered-mean server update
+    (the ``(sum_active uplink + sum_silent u_hat) / m`` identity, computed
+    as ONE mean over the scattered buffer so it matches the masked path
+    bitwise), and the full dual refresh.  Returns the partial state update
+    ``{u_hat, x_s, lam_s}``."""
+    rho = resolved_rho(cfg)
+    u_hat = state["u_hat"]  # guaranteed: participation < 1 carries the cache
+    if cfg.uplink_bits is not None:  # EF21 on the cohort's cached rows only
+        uplink = ops.ef21_update(uplink, ops.row_gather(u_hat, idx),
+                                 cfg.uplink_bits, spec.leaf_rows())
+    u_hat_new = ops.row_scatter(u_hat, idx, uplink)
+    x_s_new = jnp.mean(u_hat_new, axis=0)  # <- the round's single all-reduce
+    lam_s_new = ops.dual_from_uplink(u_hat_new, x_s_new, rho)
+    return {
+        "u_hat": u_hat_new,
+        "x_s": spec.unpack(x_s_new),
+        "lam_s": lam_s_new,
+    }
+
+
+def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    """GPDMM round over the SAMPLED COHORT (ISSUE 5): gather the round's
+    active rows out of the population arena, run the fused inner loop +
+    round tail on the ``(m_active, width)`` cohort buffer (tiled via
+    ``cohort_tile`` when set), scatter the updated rows back.  Compute and
+    gradient-batch traffic scale with the cohort, not the population; the
+    O(m) work that remains is inherent to the algorithm (every client's
+    lam_{s|i} moves with the new x_s, and the server mean reads every cached
+    u_hat row).
+
+    Row-for-row identical to the masked path: the cohort rows see the same
+    per-row kernels, and the server mean is taken over the SCATTERED
+    population buffer -- the same mean-of-selected-rows the masked path
+    computes, realising (sum_active uplink + sum_silent u_hat) / m without a
+    reordered reduction (tests/test_cohort.py pins this per round)."""
+    rho = resolved_rho(cfg)
+    K = cfg.inner_steps
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    lam, x_c = state["lam_s"], state["x_c"]
+    m = lam.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+    idx, mask = T.cohort_indices(
+        participation_key(cfg, state["round"]), m, cfg.participation
+    )
+    lam_c = ops.row_gather(lam, idx)
+    x0_c = ops.row_gather(x_c, idx)
+    batch_c = cohort_batch(batch, idx, m, per_step_batches)
+
+    def inner(rows, b):
+        x0, lam_t = rows
+        snap = (jnp.broadcast_to(x_s_row[None], x0.shape)
+                if cfg.variance_reduction == "svrg" else None)
+        return inner_steps_arena(
+            spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta, rho=rho,
+            per_step=per_step_batches, vr_snapshot=snap,
+        )
+
+    x_K, x_bar = run_cohort_inner(cfg, inner, (x0_c, lam_c), batch_c,
+                                  per_step=per_step_batches)
+    x_ref = x_bar if cfg.use_avg else x_K
+
+    _, uplink = ops.round_tail(x_ref, lam_c, x_s_row, rho, with_lam_is=False)
+    new_state = cohort_tail(cfg, spec, state, uplink, idx)
+    new_state |= {
+        "x_c": ops.row_scatter(x_c, idx, x_K),  # silent clients keep carry
+        "round": state["round"] + 1,
+    }
+    return new_state, arena_metrics(new_state["lam_s"], x_K, x_s_row)
 
 
 def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, return_trace):
@@ -192,6 +272,10 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, 
     lam = state["lam_s"]
     x_c = state["x_c"]
     m = lam.shape[0]
+    if use_cohort(cfg, m) and not return_trace:
+        # trace consumers need the full-population x_K/x_ref stacking, so
+        # traced rounds stay on the masked path
+        return _round_arena_cohort(cfg, state, grad_fn, batch, per_step_batches)
     x_s_row = spec.pack(state["x_s"])
 
     snapshot = None
@@ -216,7 +300,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, 
         "x_c": x_c_new,
         "round": state["round"] + 1,
     }
-    metrics = arena_metrics(lam_s_new, x_K, x_s_row)
+    metrics = arena_metrics(lam_s_new, x_K, x_s_row, mask)
     if return_trace:
         metrics["trace"] = {
             "x_ref": spec.unpack_stacked(x_ref),
@@ -271,7 +355,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
     metrics = {
         # KKT invariant (25): sum_i lam_{s|i} == 0 identically
         "lam_sum_norm": T.tree_norm(T.tree_client_sum(lam_s_new)),
-        "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        # silent clients keep their carry, so drift averages the ACTIVE set
+        "client_drift": T.masked_client_mean(
+            T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
     if return_trace:  # quantities the convergence-theory checks need

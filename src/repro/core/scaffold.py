@@ -40,7 +40,10 @@ import jax.numpy as jnp
 from repro.configs.base import FederatedConfig
 from repro.core import arena
 from repro.core import tree_util as T
-from repro.core.api import FedOpt, affine_case, arena_grad, use_arena
+from repro.core.api import (
+    FedOpt, affine_case, arena_grad, cohort_batch, run_cohort_inner,
+    use_arena, use_cohort,
+)
 from repro.core.gpdmm import participation_key
 from repro.kernels import ops
 
@@ -90,6 +93,64 @@ def inner_steps_plain_arena(spec, grad_fn, x0, x_s_row, batch, *, K, eta,
     return x_K
 
 
+def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
+    """SCAFFOLD round over the sampled cohort (see gpdmm._round_arena_cohort):
+    the cohort's c_i rows gather, run the offset inner loop + fused
+    control-variate refresh, and scatter back.  Silent clients transmit
+    nothing, so both server means decompose as sum_active(delta) / m -- the
+    same zero-delta contract the masked path realises with selects (equal at
+    f32: the masked path subtracts the server row back out of the mean, this
+    path never adds it in)."""
+    K, eta = cfg.inner_steps, cfg.eta
+    spec = arena.ArenaSpec.from_tree(state["x_s"])
+    c_i = state["c_i"]
+    m = c_i.shape[0]
+    x_s_row = spec.pack(state["x_s"])
+    c_row = spec.pack(state["c"])
+    idx, _mask = T.cohort_indices(
+        participation_key(cfg, state["round"]), m, cfg.participation
+    )
+    c_i_c = ops.row_gather(c_i, idx)
+    batch_c = cohort_batch(batch, idx, m, per_step_batches)
+
+    def inner(rows, b):
+        (ci_t,) = rows
+        x0 = jnp.broadcast_to(x_s_row[None], ci_t.shape)
+        return inner_steps_plain_arena(
+            spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+            per_step=per_step_batches, c_i=ci_t, c_row=c_row,
+        )
+
+    x_K = run_cohort_inner(cfg, inner, (c_i_c,), batch_c,
+                           per_step=per_step_batches)
+
+    # fused per-cohort tail: c_i' = c_i - c + (x_s - x_K)/(K eta)
+    c_i_new_c = ops.scaffold_cv(c_i_c, x_K, c_row, x_s_row, 1.0 / (K * eta))
+    # server: TWO all-reduces over the cohort's deltas (silent rows are zero)
+    inv_m = 1.0 / m
+    x_s_new = x_s_row + cfg.eta_g * inv_m * jnp.sum(
+        (x_K - x_s_row[None]).astype(jnp.float32), axis=0).astype(x_s_row.dtype)
+    c_new = c_row + inv_m * jnp.sum(
+        (c_i_new_c - c_i_c).astype(jnp.float32), axis=0).astype(c_row.dtype)
+    c_i_new = ops.row_scatter(c_i, idx, c_i_new_c)  # silent clients keep c_i
+
+    new_state = {
+        "x_s": spec.unpack(x_s_new),
+        "c": spec.unpack(c_new),
+        "c_i": c_i_new,
+        "round": state["round"] + 1,
+    }
+    f32 = jnp.float32
+    metrics = {
+        "c_sum_norm": jnp.linalg.norm(
+            jnp.sum((c_i_new - c_new[None]).astype(f32), axis=0)),
+        "client_drift": jnp.mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        "used_arena": jnp.ones((), f32),
+    }
+    return new_state, metrics
+
+
 def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     """SCAFFOLD round over the flat arena: fused K-step inner loop with the
     control-variate offset, ONE fused c_i refresh, and the two server
@@ -99,6 +160,8 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     spec = arena.ArenaSpec.from_tree(state["x_s"])
     c_i = state["c_i"]  # arena-resident (m, width)
     m = c_i.shape[0]
+    if use_cohort(cfg, m):
+        return _round_arena_cohort(cfg, state, grad_fn, batch, per_step_batches)
     x_s_row = spec.pack(state["x_s"])
     c_row = spec.pack(state["c"])
     x0 = jnp.broadcast_to(x_s_row[None], (m, spec.width))
@@ -111,6 +174,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     # fused per-client tail: c_i' = c_i - c + (x_s - x_K)/(K eta)
     c_i_new = ops.scaffold_cv(c_i, x_K, c_row, x_s_row, 1.0 / (K * eta))
     x_up = x_K
+    mask = None
     if cfg.participation < 1.0:
         mask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
@@ -135,8 +199,10 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
         # both sides, so no masking is needed)
         "c_sum_norm": jnp.linalg.norm(
             jnp.sum((c_i_new - c_new[None]).astype(f32), axis=0)),
-        "client_drift": jnp.mean(
-            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        # silent clients' x_K never enters the state: average the active set
+        "client_drift": T.masked_client_mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1),
+            mask),
         "used_arena": jnp.ones((), f32),
     }
     return new_state, metrics
@@ -171,6 +237,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     alpha = 1.0 / (K * eta)
     c_i_new = T.tmap(lambda ci, cc, s, xk: ci - cc + (s - xk) * alpha, c_i, c_b, x_s_b, x_K)
     x_up = x_K
+    mask = None
     if cfg.participation < 1.0:
         mask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
@@ -194,7 +261,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     metrics = {
         # invariant: sum_i (c_i - c) = 0 given zero init
         "c_sum_norm": T.tree_norm(T.tree_client_sum(T.tree_sub(c_i_new, T.tree_broadcast(c_new, m)))),
-        "client_drift": jnp.mean(T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b))),
+        # silent clients' x_K never enters the state: average the active set
+        "client_drift": T.masked_client_mean(
+            T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
     return new_state, metrics

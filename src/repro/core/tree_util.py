@@ -115,12 +115,43 @@ def tree_select(mask, a, b):
     return tmap(one, a, b)
 
 
+def cohort_count(m: int, frac: float) -> int:
+    """Static active-cohort size: ceil(frac * m), at least 1.  The single
+    source of truth shared by ``participation_mask`` and the cohort engine's
+    gather tables -- the two MUST agree or gathered rounds drift from masked
+    ones."""
+    return max(1, int(-(-frac * m // 1)))  # ceil
+
+
 def participation_mask(key, m: int, frac: float):
     """Deterministic participation mask: exactly ceil(frac*m) active clients,
     chosen by a seeded permutation (jit-safe, static count)."""
-    n_active = max(1, int(-(-frac * m // 1)))  # ceil
     order = jax.random.permutation(key, m)
-    return order < n_active
+    return order < cohort_count(m, frac)
+
+
+def cohort_indices(key, m: int, frac: float):
+    """The round's active cohort as (idx, mask): ``mask`` is EXACTLY
+    ``participation_mask(key, m, frac)`` and ``idx`` (static size
+    ``cohort_count``) lists the active client ids in ascending order --
+    sorted so externally produced cohort-sized batch streams
+    (``data.synthetic.cohort_lm_batches``) can line their rows up with the
+    engine's gather by client id alone."""
+    n_active = cohort_count(m, frac)
+    mask = participation_mask(key, m, frac)
+    idx = jnp.nonzero(mask, size=n_active)[0]
+    return idx, mask
+
+
+def masked_client_mean(vals, mask):
+    """Mean of a per-client ``(m,)`` metric over the ACTIVE clients only
+    (``mask=None`` = all).  Used by the drift metrics: silent clients' x_K is
+    computed-then-discarded on the masked path (carry kept), so averaging it
+    in reported movement that never entered the state."""
+    if mask is None:
+        return jnp.mean(vals)
+    mk = mask.astype(vals.dtype)
+    return jnp.sum(vals * mk) / jnp.maximum(jnp.sum(mk), 1.0)
 
 
 def tree_quantize_delta(tree, u_hat, bits: int):

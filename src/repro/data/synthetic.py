@@ -70,17 +70,51 @@ def lm_token_stream(key, n_tokens: int, vocab: int, topic: int = 0, n_topics: in
     return perm[toks].astype(jnp.int32)
 
 
-def lm_batches(key, n_steps: int, m: int, per_client_batch: int, seq_len: int, vocab: int):
+def _lm_batch_for(key, step: int, clients, m_all: int, per_client_batch: int,
+                  seq_len: int, vocab: int):
+    """One {tokens, targets} batch for the given client ids at round
+    ``step``: the key always splits ``m_all`` ways and client i draws from
+    split i / topic i, so any subset of clients sees exactly the data it
+    would see in the full stacking (the cohort-stream ==
+    gathered-full-stream contract)."""
+    ks = jax.random.split(jax.random.fold_in(key, step), m_all)
+    toks = jnp.stack(
+        [
+            lm_token_stream(ks[i], per_client_batch * (seq_len + 1), vocab, topic=i).reshape(
+                per_client_batch, seq_len + 1
+            )
+            for i in (int(c) for c in clients)
+        ]
+    )
+    return {"tokens": toks[..., :-1], "targets": toks[..., 1:]}
+
+
+def lm_batches(key, n_steps: int, m: int, per_client_batch: int, seq_len: int,
+               vocab: int, start: int = 0):
     """Yields {tokens, targets} with leading client dim m (heterogeneous:
-    client i draws from topic i)."""
-    for step in range(n_steps):
-        ks = jax.random.split(jax.random.fold_in(key, step), m)
-        toks = jnp.stack(
-            [
-                lm_token_stream(ks[i], per_client_batch * (seq_len + 1), vocab, topic=i).reshape(
-                    per_client_batch, seq_len + 1
-                )
-                for i in range(m)
-            ]
+    client i draws from topic i).  ``start`` offsets the per-round key fold,
+    so a resumed run sees EXACTLY the batches the uninterrupted run would
+    have seen from that round on (the checkpoint-resume contract)."""
+    for step in range(start, start + n_steps):
+        yield _lm_batch_for(key, step, range(m), m, per_client_batch, seq_len, vocab)
+
+
+def cohort_lm_batches(key, n_steps: int, m: int, per_client_batch: int,
+                      seq_len: int, vocab: int, *, participation: float,
+                      fed_seed: int, start: int = 0):
+    """Cohort-sized LM batch stream (ISSUE 5): round r yields batches ONLY
+    for that round's active cohort -- ``ceil(participation * m)`` rows,
+    sorted by client id -- drawn from the SAME mask contract the round
+    engine uses (``fold_in(key(fed_seed), r)``, ``tree_util.cohort_indices``).
+    At population scale nobody materialises data for silent clients; each
+    active row is identical to the corresponding row of ``lm_batches``, so
+    the engine's pass-through path (``core.api.cohort_batch``) sees exactly
+    the rows its own gather would have produced."""
+    from repro.core.tree_util import cohort_indices
+
+    for step in range(start, start + n_steps):
+        idx, _ = cohort_indices(
+            jax.random.fold_in(jax.random.key(fed_seed), step), m, participation
         )
-        yield {"tokens": toks[..., :-1], "targets": toks[..., 1:]}
+        yield _lm_batch_for(key, step, np.asarray(idx), m, per_client_batch,
+                            seq_len, vocab)

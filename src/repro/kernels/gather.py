@@ -1,0 +1,102 @@
+"""Pallas TPU kernels for the cohort engine's arena row movement
+(``core.api`` cohort plumbing, ISSUE 5).
+
+The cohort-sampled round touches the population arena exactly twice per
+resident buffer: a GATHER of the active rows into the ``(m_active, width)``
+cohort buffer before the fused inner loop, and a SCATTER of the updated rows
+back afterwards.  Both ride the scalar-prefetch index maps (the
+``neighbor_reduce.edge_flip`` idiom), so neither materialises a permutation
+or an intermediate copy:
+
+  * ``row_gather_pallas``  -- out[t] = arr[idx[t]]: the cohort index rides
+    the INPUT index map; one read of the gathered rows + one write of the
+    cohort buffer.
+
+  * ``row_scatter_pallas`` -- out[i] = rows[pos[i]] if mask[i] else dst[i]:
+    rather than aliased in-place writes, the scatter is phrased as a gather
+    over the POPULATION grid via the inverse position table
+    ``pos[idx[t]] = t`` (built by the ``ops.row_scatter`` wrapper), selecting
+    per population row between its fresh cohort row and its kept carry --
+    every output row is written exactly once, no input/output aliasing
+    contract needed, and the silent rows stream straight through.
+
+Unlike the static topology tables in ``neighbor_reduce.py``, ``idx``/
+``pos``/``mask`` here are DYNAMIC (drawn per round from the participation
+RNG): scalar-prefetch operands are SMEM values, not compile-time constants,
+so the same compiled kernel serves every round's cohort.
+
+Both kernels tile rows as ``(block, 128)`` under the shared 8 MiB VMEM
+budget and block-size conventions of ``round_tail.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_update import LANES, assert_vmem_budget
+from repro.kernels.round_tail import _resolve_block, _tile, _untile
+
+
+def _gather_kernel(idx_ref, src_ref, o_ref):
+    o_ref[0] = src_ref[0]
+
+
+def row_gather_pallas(arr, idx, *, block=None, interpret: bool = False):
+    """arr: (m, width) population buffer; idx: (m_active,) int32 row ids.
+    Returns the (m_active, width) cohort buffer out[t] = arr[idx[t]].  The
+    gather rides the scalar-prefetch input index map -- no permuted copy."""
+    m, w = arr.shape
+    mc = idx.shape[0]
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(2, br)
+    at, _, rows_p = _tile(arr, br)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(mc, rows_p // br),
+            in_specs=[
+                pl.BlockSpec((1, br, LANES), lambda t, j, idx: (idx[t], j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, br, LANES), lambda t, j, idx: (t, j, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((mc, rows_p, LANES), arr.dtype),
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), at)
+    return _untile(out, w, (mc,))
+
+
+def _scatter_kernel(pos_ref, mask_ref, rows_ref, dst_ref, o_ref):
+    i = pl.program_id(0)
+    o_ref[0] = jnp.where(mask_ref[i] != 0, rows_ref[0], dst_ref[0])
+
+
+def row_scatter_pallas(dst, pos, mask, rows, *, block=None, interpret: bool = False):
+    """dst: (m, width) population buffer; rows: (m_active, width) cohort
+    buffer; pos: (m,) int32 with pos[i] = the cohort position of population
+    row i (any in-range value at silent rows); mask: (m,) int32, 1 = active.
+    Returns the scattered population buffer (out[i] = rows[pos[i]] at active
+    rows, dst[i] elsewhere).  Phrased as a population-grid gather, so every
+    output row is written once and no aliasing contract is needed."""
+    m, w = dst.shape
+    br = _resolve_block(block, w // LANES)
+    assert_vmem_budget(3, br)
+    dt, _, rows_p = _tile(dst, br)
+    rt, _, _ = _tile(rows, br)
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(m, rows_p // br),
+            in_specs=[
+                pl.BlockSpec((1, br, LANES), lambda i, j, pos, mk: (pos[i], j, 0)),
+                pl.BlockSpec((1, br, LANES), lambda i, j, pos, mk: (i, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, br, LANES), lambda i, j, pos, mk: (i, j, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, rows_p, LANES), dst.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32), jnp.asarray(mask, jnp.int32), rt, dt)
+    return _untile(out, w, (m,))

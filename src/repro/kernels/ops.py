@@ -451,6 +451,47 @@ def ef21_update(u, u_hat, bits: int, leaf_rows, *, impl: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
+# cohort row movement (core.api cohort engine): gather the active rows out
+# of the population arena, scatter the updated rows back
+# ---------------------------------------------------------------------------
+
+def row_gather(arr, idx, *, impl: Optional[str] = None, block: Optional[int] = None):
+    """Cohort gather out[t] = arr[idx[t]]: arr (m, width), idx (m_active,)
+    int row ids.  One read of the gathered rows + one write of the
+    (m_active, width) cohort buffer; the Pallas path rides a scalar-prefetch
+    input index map (no materialised permutation)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return jnp.take(arr, idx, axis=0)
+    from repro.kernels import gather as gk
+
+    return gk.row_gather_pallas(arr, idx, block=block,
+                                interpret=(impl == "pallas_interpret"))
+
+
+def row_scatter(dst, idx, rows, *, impl: Optional[str] = None,
+                block: Optional[int] = None):
+    """Cohort scatter: returns dst with dst[idx[t]] = rows[t] (idx unique --
+    the participation draw never repeats a client).  The XLA path is a plain
+    unique-index scatter (in place when dst is donated); the Pallas path
+    re-phrases it as a population-grid gather through the inverse position
+    table pos[idx[t]] = t with a keep-mask at silent rows, so every output
+    row is written exactly once and no input/output aliasing is needed."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return dst.at[idx].set(rows, unique_indices=True)
+    from repro.kernels import gather as gk
+
+    m = dst.shape[0]
+    mc = idx.shape[0]
+    pos = jnp.zeros((m,), jnp.int32).at[idx].set(
+        jnp.arange(mc, dtype=jnp.int32), unique_indices=True)
+    mask = jnp.zeros((m,), jnp.int32).at[idx].set(1, unique_indices=True)
+    return gk.row_scatter_pallas(dst, pos, mask, rows, block=block,
+                                 interpret=(impl == "pallas_interpret"))
+
+
+# ---------------------------------------------------------------------------
 # graph-PDMM neighbor reduce + directed dual flip over the edge-dual arena
 # (core.topology layout: (2|E|, width) directed duals, width % 128 == 0)
 # ---------------------------------------------------------------------------

@@ -66,7 +66,10 @@ def run(arch: str, *, reduced: bool = True, batch: int = 4, prompt_len: int = 64
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
+    # --reduced defaults on; --full is the ONLY way to reach full-size
+    # serving (a store_true flag that already defaults True is a no-op)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)

@@ -24,6 +24,9 @@ from repro import sharding as sh
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import make as make_fed
 from repro.core import make_scan_rounds as make_fed_scan
+from repro.core.api import use_arena as fed_use_arena
+from repro.core.api import use_cohort as fed_use_cohort
+from repro.core.tree_util import cohort_count
 from repro.models import build as build_model
 
 
@@ -164,10 +167,31 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
         return out
 
     st_shard = state_shardings(state_shapes)
+    # cohort-sampled rounds (ISSUE 5): the engine only reads batches for the
+    # active cohort, so the batch structs shrink to m_active rows (rows =
+    # the round's active clients sorted by id, the cohort data-stream
+    # contract) while the POPULATION arena keeps its client-axis sharding
+    # above.  Per-client batch size still divides by the population m -- the
+    # global batch is defined per round, not per cohort.
+    m_batch = m
+    if fed_use_cohort(cfg.fed, m) and fed_use_arena(cfg.fed, param_shapes):
+        m_batch = cohort_count(m, cfg.fed.participation)
     b_struct = batch_struct(cfg, shape, stacked_m=m, rounds=R if R > 1 else None)
-    b_shard = sh.batch_shardings(
-        mesh, batch_struct(cfg, shape, stacked_m=m), stacked=True, layout=layout
-    )
+    if m_batch != m:
+        # ONE surgery: shrink the client dim (axis 0, or 1 under the round
+        # dim) of the per-round struct; the shard struct below derives from
+        # it, so the two can't drift apart
+        cdim = 1 if R > 1 else 0
+        b_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape[:cdim] + (m_batch,) + s.shape[cdim + 1:], s.dtype),
+            b_struct,
+        )
+    # per-round view (round dim dropped -- it is scanned over, never sharded)
+    b_round_struct = (jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), b_struct)
+        if R > 1 else b_struct)
+    b_shard = sh.batch_shardings(mesh, b_round_struct, stacked=True, layout=layout)
     if R > 1:  # round dim is scanned over, never sharded
         b_shard = jax.tree.map(
             lambda s: NamedSharding(mesh, P(None, *s.spec)), b_shard
@@ -184,6 +208,7 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
         out_shardings=out_shardings,
         meta={
             "m": m,
+            "m_active": m_batch,  # batch rows per round (cohort engine)
             "layout": layout,
             "K": cfg.fed.inner_steps,
             "algorithm": cfg.fed.algorithm,

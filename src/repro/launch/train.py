@@ -6,6 +6,16 @@
 On CPU this drives the reduced configs (the ~100M-scale end-to-end example
 lives in examples/train_federated_lm.py); on a real TPU mesh the same code
 path drives the full configs via --mesh production.
+
+Checkpointing: ``--ckpt-dir`` saves the FULL federated state (every arena
+buffer, the server pytree, and the round counter) at the end of the run;
+``--resume`` restores the latest checkpoint and continues the SAME
+trajectory -- the synthetic data stream is re-keyed from the restored round
+counter, so save-at-r + resume equals the uninterrupted run at f32
+(tests/test_cohort.py pins this).  Partial-participation runs on the cohort
+engine (``core.api.use_cohort``) feed cohort-sized batches from
+``data.synthetic.cohort_lm_batches`` -- data is generated only for the
+clients that actually fire each round.
 """
 from __future__ import annotations
 
@@ -24,7 +34,8 @@ from repro.configs import get_arch
 from repro.configs.base import FederatedConfig, ShapeConfig
 from repro.core import make as make_fed
 from repro.core import make_scan_rounds
-from repro.data.synthetic import lm_batches
+from repro.core.api import use_arena, use_cohort
+from repro.data.synthetic import cohort_lm_batches, lm_batches
 from repro.launch.mesh import make_smoke_mesh
 from repro.launch.steps import build_train_step
 from repro.models import build as build_model
@@ -43,6 +54,7 @@ def run(
     seq_len: int = 128,
     seed: int = 0,
     ckpt_dir: str | None = None,
+    resume: bool = False,
     log_every: int = 5,
     uplink_bits: int | None = None,
     participation: float = 1.0,
@@ -64,7 +76,53 @@ def run(
 
     key = jax.random.key(seed)
     params = model.init(key)
-    state = fed.init(params, m)
+
+    # fingerprint saved with every checkpoint and checked on --resume: a
+    # restored state only continues the SAME trajectory if the run that
+    # wrote it used the same optimiser/data hyper-parameters
+    run_config = {
+        "arch": arch, "reduced": reduced, "algorithm": algorithm, "k": k,
+        "eta": eta, "m": m, "per_client_batch": per_client_batch,
+        "seq_len": seq_len, "seed": seed, "uplink_bits": uplink_bits,
+        "participation": participation,
+    }
+
+    start = 0
+    if resume:
+        if not ckpt_dir:
+            raise ValueError("--resume needs --ckpt-dir")
+        last = ckpt.latest_step(ckpt_dir)
+        if last is None:
+            raise FileNotFoundError(f"--resume: no checkpoints under {ckpt_dir}")
+        payload = ckpt.load(ckpt_dir, last)
+        if "fed_state" not in payload:
+            raise ValueError(
+                f"checkpoint step {last} under {ckpt_dir} has no 'fed_state' "
+                "(written by a pre-ISSUE-5 launcher that saved only server "
+                "params); it cannot resume a trajectory -- retrain, or load "
+                "payload['server'] manually for serving")
+        saved_cfg = payload.get("config", {})
+        diffs = {kk: (saved_cfg.get(kk), vv) for kk, vv in run_config.items()
+                 if saved_cfg.get(kk) != vv}
+        if diffs:
+            raise ValueError(
+                f"--resume config mismatch vs checkpoint (saved, requested): "
+                f"{diffs}; resuming would NOT continue the same trajectory")
+        # the FULL federated state (arena buffers + server pytree + round
+        # counter) resumes; the data stream re-keys from the round counter,
+        # so the continuation is the uninterrupted trajectory.  fed.init is
+        # skipped entirely -- at population scale the (m, width) arena
+        # buffers it would broadcast just to be overwritten are the bulk of
+        # the job's memory
+        state = payload["fed_state"]
+        start = int(payload["round"])
+        print(f"[train] resumed full fed state at round {start} from {ckpt_dir}")
+    else:
+        state = fed.init(params, m)
+    if start >= steps:
+        print(f"[train] checkpoint already at round {start} >= steps {steps}; "
+              f"nothing to do")
+        return []
 
     def client_grad(p, b):
         return jax.grad(lambda q: model.loss(q, b)[0])(p)
@@ -92,7 +150,28 @@ def run(
         return losses.mean()
 
     history = []
-    data = lm_batches(jax.random.key(seed + 1), steps, m, per_client_batch, seq_len, cfg.vocab_size)
+    # cohort engine active -> feed cohort-sized batches (rows = the round's
+    # active clients, sorted by id; the engine's pass-through recognises the
+    # cohort-sized leading dim) so data is never generated for silent clients
+    cohort = use_cohort(cfg.fed, m) and use_arena(cfg.fed, params)
+    n_rounds = steps - start
+    data_key = jax.random.key(seed + 1)
+    if cohort:
+        data = cohort_lm_batches(
+            data_key, n_rounds, m, per_client_batch, seq_len, cfg.vocab_size,
+            participation=participation, fed_seed=cfg.fed.seed, start=start,
+        )
+    else:
+        data = lm_batches(data_key, n_rounds, m, per_client_batch, seq_len,
+                          cfg.vocab_size, start=start)
+    # cohort batches only cover the round's active clients, so evaluating
+    # the server loss on them would track the cohort's topics, not the
+    # population objective (incomparable across participation settings):
+    # hold out ONE fixed full-population batch for the logged loss instead
+    eval_batch = None
+    if cohort:
+        eval_batch = next(lm_batches(jax.random.key(seed + 2), 1, m,
+                                     per_client_batch, seq_len, cfg.vocab_size))
     t0 = time.time()
     def metrics_row(metrics):
         # last-round values, whether stacked (R,) from the scan or scalars
@@ -105,7 +184,7 @@ def run(
         round_fn = jax.jit(
             lambda s, b: fed.round(s, client_grad, b), donate_argnums=(0,))
         pending = []
-        i = 0
+        i = start
         last = metrics = None
         for batch in data:
             pending.append(batch)
@@ -117,8 +196,9 @@ def run(
             state, metrics = step_fn(state, stacked)  # metrics stacked (R,)
             i += R
             if (i - R) // max(1, log_every) != i // max(1, log_every):
+                eb = eval_batch if eval_batch is not None else last
                 row = {"round": i,
-                       "server_loss": float(eval_loss(fed.server_params(state), last)),
+                       "server_loss": float(eval_loss(fed.server_params(state), eb)),
                        **metrics_row(metrics)}
                 history.append(row)
                 print(f"[train] {json.dumps(row)}", flush=True)
@@ -127,27 +207,38 @@ def run(
             i += 1
         if last is not None and (not history or history[-1]["round"] != i):
             # always log the FINAL state (the R=1 path's i == steps-1 row)
+            eb = eval_batch if eval_batch is not None else last
             row = {"round": i,
-                   "server_loss": float(eval_loss(fed.server_params(state), last)),
+                   "server_loss": float(eval_loss(fed.server_params(state), eb)),
                    **(metrics_row(metrics) if metrics is not None else {})}
             history.append(row)
             print(f"[train] {json.dumps(row)}", flush=True)
     else:
-        for i, batch in enumerate(data):
+        for i, batch in enumerate(data, start=start):
             state, metrics = step_fn(state, batch)
-            if i % log_every == 0 or i == steps - 1:
-                loss = float(eval_loss(fed.server_params(state), batch))
+            if (i - start) % log_every == 0 or i == steps - 1:
+                eb = eval_batch if eval_batch is not None else batch
+                loss = float(eval_loss(fed.server_params(state), eb))
                 row = {"round": i, "server_loss": loss,
                        **{kk: float(v) for kk, v in metrics.items() if kk != "trace"}}
                 history.append(row)
                 print(f"[train] {json.dumps(row)}", flush=True)
     dt = time.time() - t0
-    print(f"[train] {steps} rounds (K={k}, m={m}) in {dt:.1f}s; algo={algorithm}, "
-          f"rounds_per_call={R}")
+    print(f"[train] {n_rounds} rounds (K={k}, m={m}) in {dt:.1f}s; algo={algorithm}, "
+          f"rounds_per_call={R}" + (", cohort batches" if cohort else ""))
 
     if ckpt_dir:
-        ckpt.save(ckpt_dir, steps, {"server": fed.server_params(state)})
-        print(f"[train] checkpoint saved to {ckpt_dir}")
+        # the FULL fed state (arena buffers, server pytree, round counter),
+        # not just server params: `load` + --resume continues the exact
+        # trajectory.  "server" stays for serve-side consumers.
+        done = int(state["round"])
+        ckpt.save(ckpt_dir, done, {
+            "server": fed.server_params(state),
+            "fed_state": state,
+            "round": done,
+            "config": run_config,
+        })
+        print(f"[train] full-state checkpoint (round {done}) saved to {ckpt_dir}")
     return history
 
 
@@ -164,18 +255,23 @@ def main():
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest full-state checkpoint from "
+                         "--ckpt-dir and continue the same trajectory")
     ap.add_argument("--uplink-bits", type=int, default=None,
                     help="EF21 delta-quantised uplink (beyond paper)")
     ap.add_argument("--participation", type=float, default=1.0,
-                    help="fraction of clients active per round (async PDMM)")
+                    help="fraction of clients active per round (async PDMM; "
+                         "< 1 runs the cohort-sampled round engine)")
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="rounds per jitted dispatch (lax.scan round batching)")
     args = ap.parse_args()
     run(
         args.arch, reduced=args.reduced, steps=args.steps, algorithm=args.algorithm,
         k=args.k, eta=args.eta, m=args.clients, per_client_batch=args.batch,
-        seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+        seq_len=args.seq, seed=args.seed, ckpt_dir=args.ckpt_dir, resume=args.resume,
         uplink_bits=args.uplink_bits, participation=args.participation,
         rounds_per_call=args.rounds_per_call,
     )

@@ -1,0 +1,483 @@
+"""ISSUE 5: the cohort-sampled round engine + the partial-participation /
+CLI / checkpoint bug sweep.
+
+Conformance contract: with ``participation < 1`` the cohort engine gathers
+the round's active rows, runs the fused inner loop / round tail on the
+``(m_active, width)`` cohort buffer, and scatters back -- and the resulting
+round must equal the masked full-population round, round by round at f32,
+for all four arena algorithms x {plain, EF21 where supported}, against BOTH
+the masked arena path and the per-leaf pytree path.  Plus:
+
+  * ``cohort_tile`` (lax.map tiling) parity with the one-shot cohort round;
+  * externally produced cohort-sized batches (rows sorted by client id, the
+    ``data.synthetic.cohort_lm_batches`` contract) == engine-gathered
+    population batches;
+  * interpret-mode parity for the row gather/scatter kernels;
+  * the drift-metric bugfix (silent clients' discarded x_K no longer
+    pollutes ``client_drift``);
+  * hypothesis round-trips for full-state checkpoints of arena states
+    (bf16 leaves, scalars, round counter) and the train launcher's
+    save-at-r / --resume == uninterrupted continuation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro import checkpoint as ckpt
+from repro.configs.base import FederatedConfig
+from repro.core import make, quadratic
+from repro.core import tree_util as T
+from repro.core.api import cohort_batch, map_cohort_tiles, use_cohort
+from repro.core.gpdmm import participation_key
+from repro.data import synthetic
+from repro.kernels import ops
+
+M = 8
+
+
+@pytest.fixture(scope="module", params=[24, 130], ids=["d24", "d130_odd"])
+def prob(request):
+    # d=24 -> width 128; d=130 -> width 256 with 126 zero-padded columns
+    return quadratic.generate(jax.random.key(0), m=M, n=60, d=request.param)
+
+
+def _assert_state_close(a, b, *, msg, rtol=1e-5):
+    la, paths = jax.tree.flatten(a)[0], jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree.leaves(b)
+    for (path, xa), xb in zip(paths, lb):
+        xa = np.asarray(xa, np.float32)
+        xb = np.asarray(xb, np.float32)
+        # rho-amplified duals / 1/(K eta)-scaled variates carry large
+        # magnitudes: compare at f32 resolution relative to the buffer scale
+        scale = max(1.0, float(np.abs(xa).max()))
+        np.testing.assert_allclose(
+            xa / scale, xb / scale, atol=rtol,
+            err_msg=f"{msg}: {jax.tree_util.keystr(path)}")
+
+
+def _run(algo, prob, *, rounds, participation, cohort, use_arena=True,
+         cohort_tile=None, K=3, **cfg_kw):
+    cfg = FederatedConfig(
+        algorithm=algo, inner_steps=K, eta=0.3 / prob.L, use_arena=use_arena,
+        participation=participation, cohort=cohort, cohort_tile=cohort_tile,
+        **cfg_kw)
+    opt = make(cfg)
+    grad = prob.oracle() if use_arena else prob.grad
+    s = opt.init(jnp.zeros((prob.d,)), prob.m)
+    states, metrics = [], None
+    for _ in range(rounds):
+        s, metrics = opt.round(s, grad, prob.batch())
+        states.append(s)
+    return states, metrics
+
+
+# ---------------------------------------------------------------------------
+# tentpole conformance: cohort round == masked round, round by round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("participation", [0.5, 0.25], ids=["p50", "p25"])
+@pytest.mark.parametrize("variant", ["plain", "ef21"])
+@pytest.mark.parametrize("algo", ["gpdmm", "agpdmm", "scaffold", "fedavg"])
+def test_cohort_matches_masked_arena(prob, algo, variant, participation):
+    if variant == "ef21" and algo == "scaffold":
+        pytest.skip("SCAFFOLD+EF21 rejected by core.scaffold (two-variable uplink)")
+    kw = {"uplink_bits": 8} if variant == "ef21" else {}
+    masked, _ = _run(algo, prob, rounds=5, participation=participation,
+                     cohort=False, **kw)
+    cohort, _ = _run(algo, prob, rounds=5, participation=participation,
+                     cohort=True, **kw)
+    for r, (sm, sc) in enumerate(zip(masked, cohort)):
+        _assert_state_close(
+            sm, sc, msg=f"{algo}/{variant}/p{participation} round {r}")
+
+
+@pytest.mark.parametrize("algo", ["gpdmm", "agpdmm", "scaffold", "fedavg"])
+def test_cohort_matches_pytree_masked(prob, algo):
+    """Cross-path: the cohort-arena trajectory equals the per-leaf PYTREE
+    masked trajectory too (the seed contract draws identical masks)."""
+    pyt, _ = _run(algo, prob, rounds=5, participation=0.5, cohort=False,
+                  use_arena=False)
+    coh, _ = _run(algo, prob, rounds=5, participation=0.5, cohort=True)
+    for r, (sp, sc) in enumerate(zip(pyt, coh)):
+        np.testing.assert_allclose(
+            np.asarray(sp["x_s"], np.float32), np.asarray(sc["x_s"], np.float32),
+            atol=2e-5, err_msg=f"{algo} pytree-vs-cohort x_s at round {r}")
+
+
+@pytest.mark.parametrize("tile", [1, 2])
+@pytest.mark.parametrize("algo", ["gpdmm", "agpdmm", "scaffold", "fedavg"])
+def test_cohort_tile_parity(prob, algo, tile):
+    """lax.map tiling of the cohort inner loop is a pure scheduling choice:
+    state-identical to the one-shot cohort round."""
+    one, _ = _run(algo, prob, rounds=3, participation=0.5, cohort=True)
+    tiled, _ = _run(algo, prob, rounds=3, participation=0.5, cohort=True,
+                    cohort_tile=tile)
+    for r, (sa, sb) in enumerate(zip(one, tiled)):
+        _assert_state_close(sa, sb, msg=f"{algo} tile={tile} round {r}")
+
+
+def test_cohort_tile_must_divide(prob):
+    with pytest.raises(ValueError, match="divide"):
+        _run("gpdmm", prob, rounds=1, participation=0.5, cohort=True,
+             cohort_tile=3)  # cohort of 4
+
+
+def test_cohort_per_step_batches(prob):
+    """Per-step (K, m, ...) minibatches gather on axis 1."""
+    K = 3
+    cfg = dict(rounds=3, participation=0.5, K=K)
+    batch = {"AtA": jnp.broadcast_to(prob.AtA[None], (K,) + prob.AtA.shape),
+             "Atb": jnp.broadcast_to(prob.Atb[None], (K,) + prob.Atb.shape)}
+
+    def run(cohort, tile=None):
+        opt = make(FederatedConfig(
+            algorithm="gpdmm", inner_steps=K, eta=0.3 / prob.L, use_arena=True,
+            participation=0.5, cohort=cohort, cohort_tile=tile))
+        s = opt.init(jnp.zeros((prob.d,)), prob.m)
+        out = []
+        for _ in range(3):
+            s, _ = opt.round(s, prob.oracle(), batch, per_step_batches=True)
+            out.append(s)
+        return out
+
+    for tile in [None, 2]:
+        for r, (sm, sc) in enumerate(zip(run(False), run(True, tile))):
+            _assert_state_close(sm, sc, msg=f"per-step tile={tile} round {r}")
+
+
+def test_external_cohort_sized_batches(prob):
+    """A data stream that only materialises the active cohort's rows (sorted
+    by client id -- the cohort_lm_batches contract) produces the same
+    trajectory as handing the engine the full population batch."""
+    opt = make(FederatedConfig(algorithm="gpdmm", inner_steps=2,
+                               eta=0.3 / prob.L, use_arena=True,
+                               participation=0.5, cohort=True))
+    cfg = FederatedConfig(participation=0.5)
+    s_full = opt.init(jnp.zeros((prob.d,)), prob.m)
+    s_coh = opt.init(jnp.zeros((prob.d,)), prob.m)
+    for r in range(4):
+        idx, _ = T.cohort_indices(participation_key(cfg, jnp.int32(r)), M, 0.5)
+        small = jax.tree.map(lambda x: x[idx], prob.batch())
+        s_full, _ = opt.round(s_full, prob.oracle(), prob.batch())
+        s_coh, _ = opt.round(s_coh, prob.oracle(), small)
+        _assert_state_close(s_full, s_coh, msg=f"external cohort batch round {r}")
+
+
+def test_full_participation_keeps_population_path(prob):
+    """participation=1 (or cohort=False) never touches the gather/scatter
+    engine; cohort='auto' at a cohort == population also stays masked."""
+    assert not use_cohort(FederatedConfig(participation=1.0), M)
+    assert not use_cohort(FederatedConfig(participation=0.5, cohort=False), M)
+    # ceil(0.95 * 8) = 8 == m -> auto backs off, True forces
+    assert not use_cohort(FederatedConfig(participation=0.95), M)
+    assert use_cohort(FederatedConfig(participation=0.95, cohort=True), M)
+    assert use_cohort(FederatedConfig(participation=0.25), M)
+
+
+def test_cohort_engine_is_scoped_to_its_algorithms(prob):
+    """Algorithms without a cohort round (fedsplit, the graph subsystem)
+    must never see cohort-sized batches from the launchers -- use_cohort is
+    the single predicate both consult, so the guard lives there.  A fedsplit
+    partial round with FULL batches keeps working exactly as before."""
+    for algo in ["fedsplit", "pdmm_graph", "gpdmm_graph"]:
+        assert not use_cohort(
+            FederatedConfig(algorithm=algo, participation=0.5), M), algo
+    # gpdmm rerouted onto a non-star topology: graph firing, no cohort
+    assert not use_cohort(
+        FederatedConfig(algorithm="gpdmm", topology="ring",
+                        participation=0.5), M)
+    # previously-working configuration: fedsplit + participation < 1 with
+    # population-sized batches (fedsplit ignores the mask; it must not crash)
+    opt = make(FederatedConfig(algorithm="fedsplit", inner_steps=2,
+                               eta=0.3 / prob.L, participation=0.5))
+    s = opt.init(jnp.zeros((prob.d,)), prob.m)
+    s, _ = opt.round(s, prob.oracle(), prob.batch())
+    assert np.all(np.isfinite(np.asarray(s["x_s"])))
+
+
+def test_cohort_knob_validation():
+    with pytest.raises(ValueError, match="participation"):
+        FederatedConfig(participation=0.0)
+    with pytest.raises(ValueError, match="cohort"):
+        FederatedConfig(cohort="sometimes")
+    with pytest.raises(ValueError, match="cohort_tile"):
+        FederatedConfig(cohort_tile=0)
+
+
+# ---------------------------------------------------------------------------
+# cohort plumbing units
+# ---------------------------------------------------------------------------
+
+def test_cohort_indices_match_mask_contract():
+    key = jax.random.key(3)
+    for frac in [0.1, 0.25, 0.5, 0.9]:
+        idx, mask = T.cohort_indices(key, 16, frac)
+        ref = T.participation_mask(key, 16, frac)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref))
+        assert idx.shape[0] == T.cohort_count(16, frac)
+        ids = np.asarray(idx)
+        assert sorted(ids.tolist()) == ids.tolist(), "indices must be sorted"
+        assert np.asarray(ref)[ids].all()
+
+
+def test_cohort_batch_gather_and_passthrough():
+    idx = jnp.asarray([1, 3], jnp.int32)
+    pop = {"a": jnp.arange(4 * 3, dtype=jnp.float32).reshape(4, 3)}
+    got = cohort_batch(pop, idx, 4, False)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(pop["a"][idx]))
+    small = {"a": pop["a"][idx]}
+    passed = cohort_batch(small, idx, 4, False)
+    assert passed["a"] is small["a"]  # already cohort-sized: untouched
+    per_step = {"a": jnp.stack([pop["a"], pop["a"] + 1.0])}  # (K=2, m, 3)
+    got_ps = cohort_batch(per_step, idx, 4, True)
+    np.testing.assert_array_equal(
+        np.asarray(got_ps["a"]), np.asarray(per_step["a"][:, idx]))
+    with pytest.raises(ValueError, match="client dim"):
+        cohort_batch({"a": jnp.zeros((5, 3))}, idx, 4, False)
+
+
+def test_map_cohort_tiles_matches_direct():
+    rows = jnp.arange(6 * 4, dtype=jnp.float32).reshape(6, 4)
+    batch = {"b": jnp.arange(6.0)}
+
+    def fn(r, b):
+        (x,) = r
+        return {"y": x * 2.0 + b["b"][:, None], "z": jnp.flip(x, axis=1)}
+
+    direct = fn((rows,), batch)
+    tiled = map_cohort_tiles(2, fn, (rows,), batch)
+    for k in direct:
+        np.testing.assert_array_equal(np.asarray(tiled[k]), np.asarray(direct[k]))
+    # per-step batches tile on axis 1
+    ps = {"b": jnp.arange(2.0 * 6).reshape(2, 6)}
+
+    def fn_ps(r, b):
+        (x,) = r
+        return x + b["b"].sum(0)[:, None]
+
+    np.testing.assert_array_equal(
+        np.asarray(map_cohort_tiles(3, fn_ps, (rows,), ps, per_step=True)),
+        np.asarray(fn_ps((rows,), ps)))
+
+
+@pytest.mark.parametrize("width", [128, 384])
+def test_row_gather_scatter_interpret_parity(width):
+    """The Pallas cohort-movement kernels == the XLA reference (interpret
+    mode on CPU), including non-trivial block tiling."""
+    k = jax.random.key(0)
+    arr = jax.random.normal(k, (7, width))
+    idx = jnp.asarray([6, 0, 3], jnp.int32)
+    rows = jax.random.normal(jax.random.fold_in(k, 1), (3, width))
+    np.testing.assert_array_equal(
+        np.asarray(ops.row_gather(arr, idx, impl="pallas_interpret")),
+        np.asarray(ops.row_gather(arr, idx, impl="xla")))
+    np.testing.assert_array_equal(
+        np.asarray(ops.row_scatter(arr, idx, rows, impl="pallas_interpret")),
+        np.asarray(ops.row_scatter(arr, idx, rows, impl="xla")))
+
+
+# ---------------------------------------------------------------------------
+# satellite: the drift metric averages the ACTIVE cohort only
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_arena", [True, False], ids=["arena", "pytree"])
+def test_client_drift_ignores_silent_clients(prob, use_arena):
+    """Silent clients' x_K is computed-then-discarded (carry kept), so the
+    logged drift must equal the mean over the ACTIVE set alone -- pinned by
+    recomputing it from the round's trace and mask directly."""
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=2, eta=0.3 / prob.L,
+                          use_arena=use_arena, participation=0.5, cohort=False)
+    opt = make(cfg)
+    grad = prob.oracle() if use_arena else prob.grad
+    s = opt.init(jnp.zeros((prob.d,)), prob.m)
+    for r in range(3):
+        x_s_prev = np.asarray(s["x_s"], np.float32)
+        mask = np.asarray(T.participation_mask(
+            participation_key(cfg, s["round"]), prob.m, 0.5))
+        s, metrics = opt.round(s, grad, prob.batch(), False, True)
+        x_K = np.asarray(metrics["trace"]["x_K"], np.float32)
+        per_client = np.square(x_K - x_s_prev[None]).sum(axis=1)
+        want = per_client[mask].mean()
+        np.testing.assert_allclose(float(metrics["client_drift"]), want,
+                                   rtol=1e-5, err_msg=f"round {r}")
+        # the buggy all-clients mean genuinely differs here (real regression)
+        assert abs(per_client.mean() - want) > 0
+    # direct unit check of the masked mean itself
+    vals = jnp.asarray([1.0, 10.0, 100.0, 1000.0])
+    mask = jnp.asarray([True, False, True, False])
+    assert float(T.masked_client_mean(vals, mask)) == pytest.approx(50.5)
+    assert float(T.masked_client_mean(vals, None)) == pytest.approx(277.75)
+
+
+def test_cohort_and_masked_drift_agree(prob):
+    """The masked path's (fixed) active-mean drift == the cohort path's
+    drift over its gathered rows, round by round."""
+    _, m_masked = _run("gpdmm", prob, rounds=4, participation=0.25, cohort=False)
+    _, m_cohort = _run("gpdmm", prob, rounds=4, participation=0.25, cohort=True)
+    np.testing.assert_allclose(
+        float(m_masked["client_drift"]), float(m_cohort["client_drift"]),
+        rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# satellite: full-state checkpointing (hypothesis round-trip + train resume)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 6),
+    rows=st.integers(1, 3),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    rounds=st.integers(0, 1_000_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_checkpoint_arena_state_roundtrip(tmp_path_factory, m, rows, dtype,
+                                          rounds, seed):
+    """Arena-shaped fed states (bf16/f32 (m, width) buffers, server pytrees,
+    int round counters) survive save/load BIT-exactly -- dtypes, shapes,
+    values, and python scalars."""
+    width = rows * 128
+    k = jax.random.key(seed)
+    state = {
+        "x_s": {"w": jax.random.normal(k, (37,)),
+                "b": jax.random.normal(jax.random.fold_in(k, 1), (5, 3))},
+        "lam_s": jax.random.normal(jax.random.fold_in(k, 2), (m, width)).astype(dtype),
+        "u_hat": jax.random.normal(jax.random.fold_in(k, 3), (m, width)).astype(dtype),
+        "round": jnp.asarray(rounds, jnp.int32),
+    }
+    d = tmp_path_factory.mktemp("ckpt")
+    ckpt.save(d, 1, {"fed_state": state, "round": rounds})
+    back = ckpt.load(d, 1)
+    assert back["round"] == rounds
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(state),
+                            jax.tree.leaves(back["fed_state"])):
+        assert a.dtype == b.dtype, path
+        assert a.shape == b.shape, path
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            err_msg=jax.tree_util.keystr(path))
+
+
+def test_train_resume_equals_uninterrupted(tmp_path):
+    """The launcher bugfix pinned end to end: save the FULL fed state at
+    round 3, --resume to 6, and the final state equals the uninterrupted
+    6-round run at f32 (bitwise on CPU: same program, same data keys)."""
+    from repro.launch.train import run as train_run
+
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    kw = dict(reduced=True, algorithm="gpdmm", k=1, eta=0.05, m=2,
+              per_client_batch=2, seq_len=32, log_every=2)
+    train_run("olmo-1b", steps=3, ckpt_dir=str(d1), **kw)
+    assert int(ckpt.load(d1)["round"]) == 3
+    train_run("olmo-1b", steps=6, ckpt_dir=str(d1), resume=True, **kw)
+    train_run("olmo-1b", steps=6, ckpt_dir=str(d2), **kw)
+    a, b = ckpt.load(d1), ckpt.load(d2)
+    assert int(a["round"]) == int(b["round"]) == 6
+    for (path, la), lb in zip(jax.tree_util.tree_leaves_with_path(a["fed_state"]),
+                              jax.tree.leaves(b["fed_state"])):
+        np.testing.assert_allclose(
+            np.asarray(la, np.float32), np.asarray(lb, np.float32),
+            atol=1e-6, err_msg=f"resume diverged at {jax.tree_util.keystr(path)}")
+
+
+def test_train_resume_requires_checkpoint(tmp_path):
+    from repro.launch.train import run as train_run
+
+    with pytest.raises(FileNotFoundError):
+        train_run("olmo-1b", steps=2, ckpt_dir=str(tmp_path / "none"),
+                  resume=True, reduced=True, m=2, per_client_batch=2,
+                  seq_len=32)
+    with pytest.raises(ValueError, match="ckpt-dir"):
+        train_run("olmo-1b", steps=2, resume=True, reduced=True, m=2,
+                  per_client_batch=2, seq_len=32)
+
+
+def test_train_resume_rejects_bad_checkpoints(tmp_path):
+    """Old server-only checkpoints and hyper-parameter mismatches must fail
+    loudly -- silently 'resuming' a different trajectory is the bug class
+    this satellite fixes."""
+    from repro.launch.train import run as train_run
+
+    old = tmp_path / "old"
+    ckpt.save(old, 3, {"server": {"w": jnp.zeros((4,))}})  # pre-ISSUE-5 format
+    with pytest.raises(ValueError, match="fed_state"):
+        train_run("olmo-1b", steps=6, ckpt_dir=str(old), resume=True,
+                  reduced=True, m=2, per_client_batch=2, seq_len=32)
+    kw = dict(reduced=True, algorithm="gpdmm", k=1, eta=0.05, m=2,
+              per_client_batch=2, seq_len=32)
+    good = tmp_path / "good"
+    train_run("olmo-1b", steps=2, ckpt_dir=str(good), **kw)
+    with pytest.raises(ValueError, match="config mismatch"):
+        train_run("olmo-1b", steps=4, ckpt_dir=str(good), resume=True,
+                  **{**kw, "eta": 0.1})
+
+
+# ---------------------------------------------------------------------------
+# satellite: cohort-sized synthetic data stream
+# ---------------------------------------------------------------------------
+
+def test_cohort_lm_batches_align_with_full_stream():
+    """Round r of the cohort stream == the full stream's rows at that
+    round's active client ids (sorted) -- so the engine's pass-through path
+    sees exactly what its own gather would have produced."""
+    key = jax.random.key(9)
+    m, frac, seed = 6, 0.5, 17
+    full = list(synthetic.lm_batches(key, 3, m, 2, 16, 64))
+    coh = list(synthetic.cohort_lm_batches(key, 3, m, 2, 16, 64,
+                                           participation=frac, fed_seed=seed))
+    for r, (f, c) in enumerate(zip(full, coh)):
+        idx, _ = T.cohort_indices(
+            jax.random.fold_in(jax.random.key(seed), r), m, frac)
+        idx = np.asarray(idx)
+        assert c["tokens"].shape[0] == len(idx)
+        np.testing.assert_array_equal(np.asarray(c["tokens"]),
+                                      np.asarray(f["tokens"])[idx])
+        np.testing.assert_array_equal(np.asarray(c["targets"]),
+                                      np.asarray(f["targets"])[idx])
+
+
+def test_lm_batches_start_offset():
+    """lm_batches(start=r) yields exactly the tail of the full stream (the
+    resume contract)."""
+    key = jax.random.key(2)
+    full = list(synthetic.lm_batches(key, 5, 3, 2, 16, 64))
+    tail = list(synthetic.lm_batches(key, 2, 3, 2, 16, 64, start=3))
+    for f, t in zip(full[3:], tail):
+        np.testing.assert_array_equal(np.asarray(f["tokens"]), np.asarray(t["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# satellite: serve CLI --full actually reaches full-size serving
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_full_flag():
+    """--reduced is store_true with default=True, so before the fix
+    full-size serving was unreachable from the CLI; --full must flip it."""
+    import argparse
+
+    from repro.launch import serve, train
+
+    for mod in (serve, train):
+        ap = None
+        # rebuild each launcher's parser without running main()
+        orig_parse = argparse.ArgumentParser.parse_args
+
+        def fake_parse(self, *a, **k):
+            raise _Captured(self)
+
+        class _Captured(Exception):
+            def __init__(self, parser):
+                self.parser = parser
+
+        argparse.ArgumentParser.parse_args = fake_parse
+        try:
+            mod.main()
+        except _Captured as e:
+            ap = e.parser
+        finally:
+            argparse.ArgumentParser.parse_args = orig_parse
+        assert ap is not None
+        assert ap.parse_args([]).reduced is True
+        assert ap.parse_args(["--full"]).reduced is False, mod.__name__
