@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn, time_round_donated
-from repro.configs.base import FederatedConfig
+from repro.configs.base import FaultConfig, FederatedConfig
 from repro.core import arena, make, make_oracle, make_scan_rounds, pdmm_graph
 from repro.core.tree_util import cohort_count
 from repro.kernels import ops
@@ -427,6 +427,61 @@ def bench_topology(problem: str = "lm_flat", K: int = 4):
     return records
 
 
+# ISSUE 6: the fused uplink screen -- kernel-alone cells plus a whole-round
+# screened cell.  Screening is OFF for the gated plain cells (screen="auto"
+# engages only with a fault schedule), so the hot paths CI guards pay zero;
+# the screened cell shows what a robustness-enabled round costs.
+def bench_screen(problem: str = "lm_flat", K: int = 4):
+    jax.clear_caches()
+    spec = PROBLEMS[problem]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    n = sum(int(jnp.size(v)) for v in params.values())
+    width = arena.ArenaSpec.from_tree(params).width
+    u = jax.random.normal(jax.random.key(7), (m, width))
+    ref = jax.random.normal(jax.random.key(8), (width,))
+    records = []
+    impls = ["xla"] + (["pallas"] if jax.default_backend() == "tpu" else [])
+    for impl in impls:
+        fn = jax.jit(lambda uu: ops.screen_uplink(uu, ref, impl=impl))
+        us = time_fn(fn, u)
+        # ONE read of the (m, width) uplink arena; the (m,)-sized outputs
+        # are O(1/width)
+        gbps = m * width * 4 / (us * 1e-6) / 1e9
+        emit(f"screen_{problem}_{impl}", us, f"effective_GBps={gbps:.2f}")
+        records.append({
+            "problem": problem, "algo": "screen_uplink", "variant": "plain",
+            "path": f"kernel_{impl}", "oracle": "native", "driver": "per_call",
+            "m": m, "n_params": n, "K": 0,
+            "us_per_round": round(us, 1),
+            "hbm_passes": 1,
+            "state_bytes": m * n * 4,
+            "effective_GBps": round(gbps, 2),
+        })
+
+    batch = {"dummy": jnp.zeros((m, 1))}
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=0.1,
+                          use_arena=True,
+                          faults=FaultConfig(dropout=0.1, corrupt=0.05,
+                                             seed=7),
+                          screen=True)
+    opt = make(cfg)
+    state = opt.init(jax.tree.map(jnp.copy, params), m)
+    fn = jax.jit(lambda s: opt.round(s, _native_grad, batch)[0])
+    us = time_fn(fn, state)
+    # the partial variant already counts the u_hat/x_c silence selects; on
+    # top of that: the wire-corruption where (1r + 1w) + the one-pass screen
+    passes = round_passes("gpdmm", "partial", K, arena=True,
+                          multi_leaf=len(spec["shapes"]) > 1,
+                          oracle="native") + 3
+    rec = _record(problem, "gpdmm", "screened", "arena", "native",
+                  "per_round", m, n, K, us, passes)
+    records.append(rec)
+    print(f"  -> {problem}/gpdmm/screened: {rec['us_per_round']:.0f} us/round "
+          f"(faults 10% dropout + 5% corrupt, screen on)")
+    return records
+
+
 def run(out_path: str = "BENCH_round.json"):
     trajectory = []
     for problem in PROBLEMS:
@@ -435,8 +490,18 @@ def run(out_path: str = "BENCH_round.json"):
                 trajectory.extend(bench_round(problem, algo, variant))
     trajectory.extend(bench_cohort())
     trajectory.extend(bench_topology())
+    trajectory.extend(bench_screen())
     payload = {
         "bench": "round_bench",
+        "screen_note": "screen_uplink rows (ISSUE 6) time the fused "
+                "robustness screen alone -- ONE pass over the (m, width) "
+                "uplink arena emitting per-client finite flags + squared "
+                "deviations from the downlink row (kernel_pallas appears "
+                "when a TPU is present).  The gpdmm screened row runs the "
+                "whole arena round with a 10% dropout + 5% corrupt fault "
+                "schedule and the screen on; the gated plain cells run with "
+                "screen='auto' and no schedule, so they pay nothing for the "
+                "robustness layer.",
         "cohort_note": "gpdmm partial/partial25/partial10 rows at "
                 "path=arena_cohort (ISSUE 5) run the cohort-sampled round "
                 "engine (gather active rows -> fused cohort inner loop -> "

@@ -1,8 +1,13 @@
 """Checkpointing: pytrees -> msgpack files with dtype/shape-preserving codecs.
 
-Layout: <dir>/step_<N>.msgpack, atomic writes via tmp+rename, ``latest_step``
-for resumption.  Handles nested dict/list/tuple pytrees of jax/numpy arrays
-and python scalars; bfloat16 round-trips via ml_dtypes.
+Layout: <dir>/step_<N>.msgpack, atomic writes via tmp+fsync+rename (the file
+is durable BEFORE it becomes visible, so a crash mid-save never leaves a
+half-written step under the canonical name), ``latest_step`` for resumption,
+optional keep-last-N retention so watchdog rollback anchors don't accumulate
+unboundedly.  ``load`` rejects truncated or corrupt files loudly, naming the
+file, instead of returning a garbage tree.  Handles nested dict/list/tuple
+pytrees of jax/numpy arrays and python scalars; bfloat16 round-trips via
+ml_dtypes.
 """
 from __future__ import annotations
 
@@ -55,7 +60,10 @@ def _unpack(obj):
     return obj
 
 
-def save(path: str | os.PathLike, step: int, tree: Any) -> str:
+def save(path: str | os.PathLike, step: int, tree: Any, *,
+         keep: Optional[int] = None) -> str:
+    """Write ``step`` atomically; with ``keep``, prune all but the newest
+    ``keep`` checkpoints afterwards (zero-padded names sort numerically)."""
     path = pathlib.Path(path)
     path.mkdir(parents=True, exist_ok=True)
     final = path / f"step_{step:08d}.msgpack"
@@ -63,7 +71,12 @@ def save(path: str | os.PathLike, step: int, tree: Any) -> str:
     tree = jax.tree.map(lambda x: jax.device_get(x) if isinstance(x, jax.Array) else x, tree)
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, final)
+    if keep is not None and keep > 0:
+        for old in sorted(path.glob("step_*.msgpack"))[:-keep]:
+            old.unlink(missing_ok=True)
     return str(final)
 
 
@@ -81,5 +94,15 @@ def load(path: str | os.PathLike, step: Optional[int] = None) -> Any:
         step = latest_step(path)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {path}")
-    with open(path / f"step_{step:08d}.msgpack", "rb") as f:
-        return _unpack(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+    fp = path / f"step_{step:08d}.msgpack"
+    if not fp.exists():
+        raise FileNotFoundError(f"no checkpoint file {fp}")
+    with open(fp, "rb") as f:
+        raw = f.read()
+    try:
+        return _unpack(msgpack.unpackb(raw, raw=False, strict_map_key=False))
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint {fp} is truncated or corrupt ({len(raw)} bytes): "
+            f"{e}; delete it and resume from an earlier step"
+        ) from e

@@ -42,6 +42,61 @@ SHAPES: dict[str, ShapeConfig] = {
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Deterministic client-fault schedule (the robustness layer, ISSUE 6).
+
+    Every fault is a pure function of ``(seed, round, client)`` --
+    ``core.faults.plan`` folds the round counter into ``seed`` -- so a fault
+    trace replays EXACTLY across reruns, resumes, and watchdog rollbacks.
+
+    Three silence classes -- ``dropout`` (the client crashed), ``straggler``
+    (missed the round barrier), ``delay`` (the downlink never arrived, so
+    the client sat the round out) -- all map onto the u_hat silence
+    contract: the server reuses its cached uplink for the round, exactly as
+    for a participation-masked client.  ``corrupt`` clients DO transmit, but
+    the wire mangles the packet (NaN row / Inf row / sign flip / ``blowup``
+    x magnitude; the class is drawn per client) -- the faults uplink
+    screening (``FederatedConfig.screen``) exists to catch.
+    """
+
+    dropout: float = 0.0    # P(client never returns this round)
+    straggler: float = 0.0  # P(client misses the round barrier)
+    delay: float = 0.0      # P(downlink x_s lost -> client sits the round out)
+    corrupt: float = 0.0    # P(transmitted uplink mangled on the wire)
+    blowup: float = 1e6     # magnitude multiplier of the "blowup" corruption
+    seed: int = 1234        # fault RNG seed, independent of the data/mask seeds
+
+    def __post_init__(self):
+        for name in ("dropout", "straggler", "delay", "corrupt"):
+            v = getattr(self, name)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(
+                    f"fault rate {name} must be in [0, 1], got {v}")
+
+    @property
+    def any(self) -> bool:
+        return (self.dropout > 0 or self.straggler > 0 or self.delay > 0
+                or self.corrupt > 0)
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultConfig":
+        """Build from a CLI spec string, e.g. ``"dropout=0.1,corrupt=0.05,seed=7"``."""
+        kwargs = {}
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            key, _, val = item.partition("=")
+            key = key.strip()
+            if key not in cls.__dataclass_fields__:
+                raise ValueError(
+                    f"unknown fault field {key!r} (have "
+                    f"{sorted(cls.__dataclass_fields__)})")
+            kwargs[key] = int(val) if key == "seed" else float(val)
+        return cls(**kwargs)
+
+
+@dataclass(frozen=True)
 class FederatedConfig:
     """How the paper's centralised-network optimisers map onto the mesh.
 
@@ -162,6 +217,24 @@ class FederatedConfig:
     # snapshot gradient at the round's server estimate.  None = plain
     # stochastic gradients (paper-faithful).
     variance_reduction: Optional[str] = None
+    # Deterministic fault injection (core.faults).  None = fault-free rounds
+    # (the default, bit-identical to pre-robustness behaviour).
+    faults: Optional[FaultConfig] = None
+    # Fused uplink screening (kernels/screen.py via ops.screen_uplink): ONE
+    # pass over the (m, width) uplink buffer emits per-client finite flags
+    # and squared deviations from the downlink reference; the server demotes
+    # any non-finite or norm-outlier client to SILENT for the round (its
+    # cached u_hat uplink is reused), so a screened round is bit-identical
+    # to a participation-masked round.  "auto" screens exactly when a fault
+    # schedule is configured; True always screens (also catches NaNs the
+    # optimiser itself produces); False never screens -- a corrupted uplink
+    # then poisons the server mean (the failure mode docs/robustness.md
+    # demonstrates).
+    screen: bool | str = "auto"
+    # Norm-outlier rule: demote clients whose squared deviation from the
+    # reference exceeds screen_mult x the round median.  <= 0 disables the
+    # outlier rule (non-finite screening still applies).
+    screen_mult: float = 100.0
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -174,6 +247,21 @@ class FederatedConfig:
             raise ValueError(
                 f"cohort_tile must be a positive tile size or None, got "
                 f"{self.cohort_tile}")
+        if self.screen not in (True, False, "auto"):
+            raise ValueError(
+                f"screen must be True, False or 'auto', got {self.screen!r}")
+        # cohort_tile must divide the cohort size (core.api.map_cohort_tiles
+        # would only raise at trace time, deep inside a jit).  Checkable here
+        # whenever the population is known; a tile >= the cohort is fine --
+        # the tiled map degenerates to one shot.
+        if (self.cohort_tile is not None and self.num_clients is not None
+                and self.participation < 1.0):
+            mc = max(1, int(-(-self.participation * self.num_clients // 1)))
+            if self.cohort_tile < mc and mc % self.cohort_tile:
+                raise ValueError(
+                    f"cohort_tile={self.cohort_tile} does not divide the "
+                    f"cohort size {mc} (= ceil(participation="
+                    f"{self.participation} * num_clients={self.num_clients}))")
 
 
 # ---------------------------------------------------------------------------

@@ -9,8 +9,8 @@ baselines, all as model-agnostic pytree transformations.
 """
 from repro.core.api import FedOpt, make, make_oracle, make_scan_rounds, resolved_rho
 from repro.core import (
-    agpdmm, fedavg, fedsplit, gpdmm, pdmm, pdmm_graph, quadratic, scaffold,
-    softmax, theory, topology, tree_util,
+    agpdmm, faults, fedavg, fedsplit, gpdmm, pdmm, pdmm_graph, quadratic,
+    scaffold, softmax, theory, topology, tree_util,
 )
 
 __all__ = [
@@ -20,6 +20,7 @@ __all__ = [
     "make_scan_rounds",
     "resolved_rho",
     "agpdmm",
+    "faults",
     "fedavg",
     "fedsplit",
     "gpdmm",

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena
+from repro.core import arena, faults
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, cohort_batch, resolved_rho, run_cohort_inner, use_arena,
@@ -66,9 +66,10 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
                               per_step=per_step_batches)
 
     _, uplink = ops.round_tail(x_K, lam_c, x_s_row, rho, with_lam_is=False)
-    new_state = cohort_tail(cfg, spec, state, uplink, idx)
+    fplan = faults.plan(cfg, state["round"], m)
+    new_state, keep_c, fm = cohort_tail(cfg, spec, state, uplink, idx, fplan)
     new_state |= {"round": state["round"] + 1}
-    return new_state, arena_metrics(new_state["lam_s"], x_K, x_s_row)
+    return new_state, arena_metrics(new_state["lam_s"], x_K, x_s_row, keep_c) | fm
 
 
 def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
@@ -92,13 +93,13 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     )
 
     _, uplink = ops.round_tail(x_K, lam, x_s_row, rho, with_lam_is=False)
-    new_state, x_s_new, lam_s_new, mask = arena_tail(cfg, spec, state, uplink, m)
+    new_state, x_s_new, lam_s_new, mask, fm = arena_tail(cfg, spec, state, uplink, m)
     new_state |= {
         "x_s": spec.unpack(x_s_new),
         "lam_s": lam_s_new,
         "round": state["round"] + 1,
     }
-    return new_state, arena_metrics(lam_s_new, x_K, x_s_row, mask)
+    return new_state, arena_metrics(lam_s_new, x_K, x_s_row, mask) | fm
 
 
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
@@ -119,15 +120,23 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     lam_is = T.tmap(lambda s, xk, l: rho * (s - xk) - l, x_s_b, x_K, lam_s)
     uplink = T.tmap(lambda xk, l: xk - l / rho, x_K, lam_is)
     new_state = {}
-    mask = None
     if cfg.uplink_bits is not None:  # beyond-paper: EF21 delta-quantised uplink
         uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
+    # robustness layer: inject -> participation -> screen -> combined select
+    fplan = faults.plan(cfg, state["round"], m)
+    uplink = faults.inject_tree(cfg.faults, fplan, uplink)
+    pmask = None
     if cfg.participation < 1.0:  # beyond-paper: async PDMM (partial rounds)
-        mask = T.participation_mask(
+        pmask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
         )
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep_tree(cfg, uplink, x_s)
+    mask = faults.combine_mask(pmask, fplan, keep)
+    if mask is not None:
         uplink = T.tree_select(mask, uplink, state["u_hat"])
-    if cfg.uplink_bits is not None or cfg.participation < 1.0:
+    if "u_hat" in state:
         new_state["u_hat"] = uplink
     x_s_new = T.tree_client_mean(uplink)
     x_s_new_b = T.tree_broadcast(x_s_new, m)
@@ -142,6 +151,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
             T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, faults.combine_mask(pmask, fplan, None), keep)
     return new_state, metrics
 
 
@@ -154,7 +166,8 @@ def make(cfg: FederatedConfig) -> FedOpt:
                 "lam_s": arena.zeros(spec, m),
                 "round": jnp.zeros((), jnp.int32),
             }
-            if cfg.uplink_bits is not None or cfg.participation < 1.0:
+            if (cfg.uplink_bits is not None or cfg.participation < 1.0
+                    or faults.needs_cache(cfg)):
                 row = spec.pack(params)
                 st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
             return st
@@ -163,7 +176,8 @@ def make(cfg: FederatedConfig) -> FedOpt:
             "lam_s": T.tree_zeros_like(T.tree_broadcast(params, m)),
             "round": jnp.zeros((), jnp.int32),
         }
-        if cfg.uplink_bits is not None or cfg.participation < 1.0:
+        if (cfg.uplink_bits is not None or cfg.participation < 1.0
+                or faults.needs_cache(cfg)):
             st["u_hat"] = T.tree_broadcast(params, m)  # EF21/async server view
         return st
 

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena
+from repro.core import arena, faults
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, cohort_batch, run_cohort_inner, use_arena, use_cohort,
@@ -71,6 +71,15 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     if cfg.uplink_bits is not None:  # EF21 on the cohort's cached rows only
         uplink = ops.ef21_update(uplink, ops.row_gather(u_hat, idx),
                                  cfg.uplink_bits, spec.leaf_rows())
+    fplan = faults.plan(cfg, state["round"], m)
+    plan_c = faults.take(fplan, idx)
+    uplink = faults.inject(cfg.faults, plan_c, uplink)
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep(cfg, uplink, x_s_row)
+    keep_c = faults.combine_mask(None, plan_c, keep)
+    if keep_c is not None:
+        uplink = jnp.where(keep_c[:, None], uplink, ops.row_gather(u_hat, idx))
     u_hat_new = ops.row_scatter(u_hat, idx, uplink)
     x_s_new = jnp.mean(u_hat_new, axis=0)  # <- the round's single all-reduce
     new_state = {
@@ -80,10 +89,14 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     }
     f32 = jnp.float32
     metrics = {
-        "client_drift": jnp.mean(
-            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        "client_drift": T.masked_client_mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1),
+            keep_c),
         "used_arena": jnp.ones((), f32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, None if plan_c is None else ~plan_c.silent, keep)
     return new_state, metrics
 
 
@@ -102,14 +115,22 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
 
     uplink = x_K
     new_state = {}
-    mask = None
     u_hat = state.get("u_hat")  # arena-resident (m, width) or absent
     if cfg.uplink_bits is not None:  # fused EF21: 2 passes instead of ~4
         uplink = ops.ef21_update(uplink, u_hat, cfg.uplink_bits, spec.leaf_rows())
+    # robustness layer: inject -> participation -> screen -> combined select
+    fplan = faults.plan(cfg, state["round"], m)
+    uplink = faults.inject(cfg.faults, fplan, uplink)
+    pmask = None
     if cfg.participation < 1.0:
-        mask = T.participation_mask(
+        pmask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
         )
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep(cfg, uplink, x_s_row)
+    mask = faults.combine_mask(pmask, fplan, keep)
+    if mask is not None:
         # silent clients transmit nothing; the server keeps its cached view
         uplink = jnp.where(mask[:, None], uplink, u_hat)
     if u_hat is not None:
@@ -124,6 +145,9 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
             mask),
         "used_arena": jnp.ones((), f32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, faults.combine_mask(pmask, fplan, None), keep)
     return new_state, metrics
 
 
@@ -150,15 +174,23 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
 
     uplink = x_K
     new_state = {}
-    mask = None
     if cfg.uplink_bits is not None:  # beyond-paper: EF21 delta-quantised uplink
         uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
+    # robustness layer: inject -> participation -> screen -> combined select
+    fplan = faults.plan(cfg, state["round"], m)
+    uplink = faults.inject_tree(cfg.faults, fplan, uplink)
+    pmask = None
     if cfg.participation < 1.0:
-        mask = T.participation_mask(
+        pmask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
         )
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep_tree(cfg, uplink, x_s)
+    mask = faults.combine_mask(pmask, fplan, keep)
+    if mask is not None:
         uplink = T.tree_select(mask, uplink, state["u_hat"])
-    if cfg.uplink_bits is not None or cfg.participation < 1.0:
+    if "u_hat" in state:
         new_state["u_hat"] = uplink  # the server's per-client view
     x_s_new = T.tree_client_mean(uplink)
     new_state |= {"x_s": x_s_new, "round": state["round"] + 1}
@@ -168,12 +200,16 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
             T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, faults.combine_mask(pmask, fplan, None), keep)
     return new_state, metrics
 
 
 def make(cfg: FederatedConfig) -> FedOpt:
     def init(params, m):
-        needs_cache = cfg.uplink_bits is not None or cfg.participation < 1.0
+        needs_cache = (cfg.uplink_bits is not None or cfg.participation < 1.0
+                       or faults.needs_cache(cfg))
         if use_arena(cfg, params):
             st = {"x_s": params, "round": jnp.zeros((), jnp.int32)}
             if needs_cache:

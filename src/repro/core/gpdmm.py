@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena
+from repro.core import arena, faults
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, affine_case, arena_grad, cohort_batch, resolved_rho,
@@ -144,26 +144,42 @@ def participation_key(cfg: FederatedConfig, round_idx):
 
 def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
     """Shared GPDMM/AGPDMM arena round tail: fused EF21 quantise-delta,
-    participation select, u_hat carry, the single client-mean all-reduce,
-    and the fused dual refresh.  Returns (state_updates, x_s_new_row,
-    lam_s_new, mask)."""
+    fault injection + uplink screening (core.faults), the combined
+    participation/fault/screen select vs the u_hat cache, the single
+    client-mean all-reduce, and the fused dual refresh.  Returns
+    (state_updates, x_s_new_row, lam_s_new, mask, fault_metrics) -- ``mask``
+    is the round's effective active mask (None = every uplink entered the
+    mean); demoted and faulted clients are SILENT, full stop, so the round
+    is bit-identical to a participation-masked round with the same mask."""
     rho = resolved_rho(cfg)
     new_state = {}
-    mask = None
     u_hat = state.get("u_hat")  # arena-resident (m, width) or absent
     if cfg.uplink_bits is not None:  # fused EF21: 2 passes instead of ~4
         uplink = ops.ef21_update(uplink, u_hat, cfg.uplink_bits, spec.leaf_rows())
+    # the wire corrupts what was TRANSMITTED, i.e. the EF21-integrated view
+    fplan = faults.plan(cfg, state["round"], m)
+    uplink = faults.inject(cfg.faults, fplan, uplink)
+    pmask = None
     if cfg.participation < 1.0:
-        mask = T.participation_mask(
+        pmask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
         )
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep(cfg, uplink, spec.pack(state["x_s"]))
+    mask = faults.combine_mask(pmask, fplan, keep)
+    if mask is not None:
         uplink = jnp.where(mask[:, None], uplink, u_hat)
     if u_hat is not None:
         new_state["u_hat"] = uplink
     x_s_new = jnp.mean(uplink, axis=0)  # <- the round's single all-reduce
     # fused tail pass 2: lam' = rho (u - x_s'), server row broadcast in-kernel
     lam_s_new = ops.dual_from_uplink(uplink, x_s_new, rho)
-    return new_state, x_s_new, lam_s_new, mask
+    fm = {}
+    if fplan is not None or keep is not None:
+        fm = faults.fault_metrics(
+            fplan, faults.combine_mask(pmask, fplan, None), keep)
+    return new_state, x_s_new, lam_s_new, mask, fm
 
 
 def arena_metrics(lam_s_new, x_K, x_s_row, mask=None):
@@ -185,27 +201,42 @@ def arena_metrics(lam_s_new, x_K, x_s_row, mask=None):
     }
 
 
-def cohort_tail(cfg: FederatedConfig, spec, state, uplink, idx):
+def cohort_tail(cfg: FederatedConfig, spec, state, uplink, idx, fplan=None):
     """Shared GPDMM/AGPDMM cohort round tail (the cohort sibling of
     ``arena_tail``): fused EF21 against the cohort's cached ``u_hat`` rows,
-    the scatter into the population cache, the scattered-mean server update
-    (the ``(sum_active uplink + sum_silent u_hat) / m`` identity, computed
-    as ONE mean over the scattered buffer so it matches the masked path
-    bitwise), and the full dual refresh.  Returns the partial state update
-    ``{u_hat, x_s, lam_s}``."""
+    fault injection + screening on the cohort uplink, the scatter into the
+    population cache, the scattered-mean server update (the
+    ``(sum_active uplink + sum_silent u_hat) / m`` identity, computed as ONE
+    mean over the scattered buffer so it matches the masked path bitwise),
+    and the full dual refresh.  Returns ``({u_hat, x_s, lam_s}, keep_c,
+    fault_metrics)`` -- ``keep_c`` is the cohort-shaped surviving mask (None
+    = the whole cohort's uplink entered the cache).  Note the screening
+    median is taken over the COHORT, not the population."""
     rho = resolved_rho(cfg)
     u_hat = state["u_hat"]  # guaranteed: participation < 1 carries the cache
     if cfg.uplink_bits is not None:  # EF21 on the cohort's cached rows only
         uplink = ops.ef21_update(uplink, ops.row_gather(u_hat, idx),
                                  cfg.uplink_bits, spec.leaf_rows())
+    plan_c = faults.take(fplan, idx)
+    uplink = faults.inject(cfg.faults, plan_c, uplink)
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep(cfg, uplink, spec.pack(state["x_s"]))
+    keep_c = faults.combine_mask(None, plan_c, keep)
+    if keep_c is not None:
+        uplink = jnp.where(keep_c[:, None], uplink, ops.row_gather(u_hat, idx))
     u_hat_new = ops.row_scatter(u_hat, idx, uplink)
     x_s_new = jnp.mean(u_hat_new, axis=0)  # <- the round's single all-reduce
     lam_s_new = ops.dual_from_uplink(u_hat_new, x_s_new, rho)
+    fm = {}
+    if fplan is not None or keep is not None:
+        fm = faults.fault_metrics(
+            fplan, None if plan_c is None else ~plan_c.silent, keep)
     return {
         "u_hat": u_hat_new,
         "x_s": spec.unpack(x_s_new),
         "lam_s": lam_s_new,
-    }
+    }, keep_c, fm
 
 
 def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
@@ -250,12 +281,16 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     x_ref = x_bar if cfg.use_avg else x_K
 
     _, uplink = ops.round_tail(x_ref, lam_c, x_s_row, rho, with_lam_is=False)
-    new_state = cohort_tail(cfg, spec, state, uplink, idx)
+    fplan = faults.plan(cfg, state["round"], m)
+    new_state, keep_c, fm = cohort_tail(cfg, spec, state, uplink, idx, fplan)
+    # demoted cohort rows are silent, full stop: the carry keeps its
+    # round-start row exactly as a never-sampled client's does
+    x_K_kept = x_K if keep_c is None else jnp.where(keep_c[:, None], x_K, x0_c)
     new_state |= {
-        "x_c": ops.row_scatter(x_c, idx, x_K),  # silent clients keep carry
+        "x_c": ops.row_scatter(x_c, idx, x_K_kept),  # silent clients keep carry
         "round": state["round"] + 1,
     }
-    return new_state, arena_metrics(new_state["lam_s"], x_K, x_s_row)
+    return new_state, arena_metrics(new_state["lam_s"], x_K, x_s_row, keep_c) | fm
 
 
 def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, return_trace):
@@ -290,7 +325,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, 
     # fused tail pass 1: the uplink (and lam_is only when a trace wants it --
     # 3 reads + 1 write on the training path, +1 write with the trace)
     lam_is, uplink = ops.round_tail(x_ref, lam, x_s_row, rho, with_lam_is=return_trace)
-    new_state, x_s_new, lam_s_new, mask = arena_tail(cfg, spec, state, uplink, m)
+    new_state, x_s_new, lam_s_new, mask, fm = arena_tail(cfg, spec, state, uplink, m)
 
     # silent clients did not really run their inner steps: keep their carry
     x_c_new = x_K if mask is None else jnp.where(mask[:, None], x_K, x_c)
@@ -300,7 +335,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches, 
         "x_c": x_c_new,
         "round": state["round"] + 1,
     }
-    metrics = arena_metrics(lam_s_new, x_K, x_s_row, mask)
+    metrics = arena_metrics(lam_s_new, x_K, x_s_row, mask) | fm
     if return_trace:
         metrics["trace"] = {
             "x_ref": spec.unpack_stacked(x_ref),
@@ -330,16 +365,25 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
     lam_is = T.tmap(lambda s, xr, l: rho * (s - xr) - l, x_s_b, x_ref, lam_s)
     uplink = T.tmap(lambda xr, l: xr - l / rho, x_ref, lam_is)
     new_state = {}
-    mask = None
     if cfg.uplink_bits is not None:  # beyond-paper: EF21 delta-quantised uplink
         uplink = T.tree_quantize_delta(uplink, state["u_hat"], cfg.uplink_bits)
+    # the robustness layer is layout-independent: the same inject ->
+    # participation -> screen -> combined-select pipeline as arena_tail
+    fplan = faults.plan(cfg, state["round"], m)
+    uplink = faults.inject_tree(cfg.faults, fplan, uplink)
+    pmask = None
     if cfg.participation < 1.0:  # beyond-paper: async PDMM (partial rounds)
-        mask = T.participation_mask(
+        pmask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
         )
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep_tree(cfg, uplink, x_s)
+    mask = faults.combine_mask(pmask, fplan, keep)
+    if mask is not None:
         # silent clients transmit nothing; the server keeps its cached view
         uplink = T.tree_select(mask, uplink, state["u_hat"])
-    if cfg.uplink_bits is not None or cfg.participation < 1.0:
+    if "u_hat" in state:
         new_state["u_hat"] = uplink  # the server's per-client view
     x_s_new = T.tree_client_mean(uplink)  # <- the round's single all-reduce
     x_s_new_b = T.tree_broadcast(x_s_new, m)
@@ -360,6 +404,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
             T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, faults.combine_mask(pmask, fplan, None), keep)
     if return_trace:  # quantities the convergence-theory checks need
         metrics["trace"] = {"x_ref": x_ref, "x_bar": x_bar, "lam_is": lam_is, "x_K": x_K}
     return new_state, metrics
@@ -379,7 +426,8 @@ def make(cfg: FederatedConfig) -> FedOpt:
                 "x_c": jnp.broadcast_to(row[None], (m, spec.width)),
                 "round": jnp.zeros((), jnp.int32),
             }
-            if cfg.uplink_bits is not None or cfg.participation < 1.0:
+            if (cfg.uplink_bits is not None or cfg.participation < 1.0
+                    or faults.needs_cache(cfg)):
                 st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
             return st
         st = {
@@ -388,11 +436,12 @@ def make(cfg: FederatedConfig) -> FedOpt:
             "x_c": T.tree_broadcast(params, m),  # x_i^{0,K} = x_s^1 (Alg. 1)
             "round": jnp.zeros((), jnp.int32),
         }
-        if cfg.uplink_bits is not None or cfg.participation < 1.0:
+        if (cfg.uplink_bits is not None or cfg.participation < 1.0
+                or faults.needs_cache(cfg)):
             # server's running view of each client's uplink (EF21 integrator /
-            # async-PDMM cache); init == round-0 uplink x_c - 0/rho.  A fresh
-            # broadcast, NOT an alias of x_c: donated round states must not
-            # contain the same buffer twice.
+            # async-PDMM cache / fault-silence fallback); init == round-0
+            # uplink x_c - 0/rho.  A fresh broadcast, NOT an alias of x_c:
+            # donated round states must not contain the same buffer twice.
             st["u_hat"] = T.tree_broadcast(params, m)
         return st
 

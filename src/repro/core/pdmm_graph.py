@@ -68,7 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena, topology
+from repro.core import arena, faults, topology
 from repro.core import tree_util as T
 from repro.core.api import FedOpt, affine_case, arena_grad, resolved_rho
 from repro.core.gpdmm import participation_key
@@ -187,16 +187,25 @@ def inner_steps_graph(spec, grad_fn, x0, s, batch, *, K, eta, c, deg, per_step):
 # one firing phase (a color class, or all nodes under the sync schedule)
 # ---------------------------------------------------------------------------
 
-def _phase(cfg, topo, spec, x, z, fn, batch, per_step, pmask, c, exact, members):
+def _phase(cfg, topo, spec, x, z, fn, batch, per_step, pmask, fplan, c,
+           exact, members):
     """Nodes in ``members`` (static) fire: re-reduce the duals, update their
     primal rows, flip the duals on their incident edges.  ``pmask`` (dynamic
-    (n_data,) bool or None) silences data nodes for stochastic firing."""
+    (n_data,) bool or None) silences data nodes for stochastic firing AND for
+    the round's fault silence (folded in by ``_round``).  ``fplan`` corrupts
+    the TRANSMITTED ``x_ref`` of firing data nodes; screening compares each
+    node's transmission against its own round-start carry (the per-row
+    reference variant of ``ops.screen_uplink``) and demotes outliers --
+    their carry reverts and their incident dual flips are masked, exactly a
+    silent node.  Returns ``(x, z, demoted_count)``."""
     s = ops.neighbor_reduce(
         z, seg=topo.src, first=topo.first_flags(), sgn=topo.sgn, n=topo.n
     )
     dm = members[members < topo.n_data]  # static firing data nodes
     am = members[members >= topo.n_data]  # static firing aux (f = 0) nodes
     x_flip = x
+    keep = None
+    demoted = jnp.zeros((), jnp.float32)
 
     if dm.size:
         deg_dm = topo.deg[dm]
@@ -238,8 +247,21 @@ def _phase(cfg, topo, spec, x, z, fn, batch, per_step, pmask, c, exact, members)
             )
             x_cand = x_K  # the primal carry (GPDMM: x_i^{r,0} = x_i^{r-1,K})
             x_ref = x_bar if cfg.use_avg else x_K  # what the dual flip sees
-        if pmask is not None:
-            sub = pmask[jnp.asarray(dm)]
+        # the wire corrupts the TRANSMITTED x_ref; the node's local carry
+        # x_cand stays honest (a neighbor cannot corrupt local state)
+        plan_dm = faults.take(fplan, dm)
+        x_ref = faults.inject(cfg.faults, plan_dm, x_ref)
+        if faults.screening_on(cfg):
+            # receivers screen each node's transmission against that node's
+            # own previous carry (the per-row reference)
+            keep = faults.screen_keep(cfg, x_ref, x0)
+            sub_alive = (jnp.ones(dm.size, bool) if pmask is None
+                         else pmask[jnp.asarray(dm)])
+            demoted = jnp.sum((sub_alive & ~keep).astype(jnp.float32))
+        sub = None if pmask is None else pmask[jnp.asarray(dm)]
+        sub = faults.combine_mask(sub, None, keep)
+        if sub is not None:
+            # demoted == silent, full stop: the carry reverts too
             x_cand = jnp.where(sub[:, None], x_cand, x0)
             x_ref = jnp.where(sub[:, None], x_ref, x0)
         x = x.at[dm].set(x_cand)
@@ -255,18 +277,24 @@ def _phase(cfg, topo, spec, x, z, fn, batch, per_step, pmask, c, exact, members)
 
     fired_static = np.zeros(topo.n, bool)
     fired_static[members] = True
-    if pmask is None:
+    dyn = pmask
+    if keep is not None:
+        # scatter this phase's keep over the data nodes; non-firing rows stay
+        # True (they are masked out by fired_static anyway)
+        keep_full = jnp.ones((topo.n_data,), bool).at[jnp.asarray(dm)].set(keep)
+        dyn = keep_full if dyn is None else dyn & keep_full
+    if dyn is None:
         slot_static = fired_static[topo.nbr]
         mask = None if slot_static.all() else jnp.asarray(slot_static, jnp.int32)
     else:
         fire_nodes = jnp.concatenate(
-            [jnp.asarray(fired_static[: topo.n_data]) & pmask,
+            [jnp.asarray(fired_static[: topo.n_data]) & dyn,
              jnp.asarray(fired_static[topo.n_data:])]
         )
         mask = fire_nodes[jnp.asarray(topo.nbr)].astype(jnp.int32)
     z = ops.edge_flip(z, x_flip, c, rev=topo.rev, nbr=topo.nbr, sgn=topo.sgn,
                       mask=mask)
-    return x, z
+    return x, z, demoted
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +313,13 @@ def _round(cfg: FederatedConfig, state, fn, batch, per_step_batches=False, *,
         pmask = T.participation_mask(
             participation_key(cfg, state["round"]), topo.n_data, cfg.participation
         )
+    # the round's fault plan over the DATA nodes; silence folds into the
+    # firing mask (a silent node neither updates nor flips -- the neighbors
+    # keep their stale duals, the centralised u_hat cache semantics)
+    fplan = faults.plan(cfg, state["round"], topo.n_data)
+    if fplan is not None:
+        alive = ~fplan.silent
+        pmask = alive if pmask is None else pmask & alive
 
     if cfg.graph_schedule == "color":
         phases = topo.colors
@@ -294,9 +329,11 @@ def _round(cfg: FederatedConfig, state, fn, batch, per_step_batches=False, *,
         raise ValueError(
             f"unknown graph_schedule {cfg.graph_schedule!r} (color | sync)")
 
+    demoted = jnp.zeros((), jnp.float32)
     for members in phases:
-        x, z = _phase(cfg, topo, spec, x, z, fn, batch, per_step_batches,
-                      pmask, c, exact, members)
+        x, z, dem = _phase(cfg, topo, spec, x, z, fn, batch, per_step_batches,
+                           pmask, fplan, c, exact, members)
+        demoted = demoted + dem
 
     # consensus estimate: the aux center's row on a star (== the centralised
     # x_s), the node mean otherwise
@@ -317,6 +354,11 @@ def _round(cfg: FederatedConfig, state, fn, batch, per_step_batches=False, *,
         "consensus_err": consensus,
         "used_arena": jnp.ones((), f32),
     }
+    if fplan is not None or faults.screening_on(cfg):
+        metrics["faults_injected"] = (
+            jnp.zeros((), f32) if fplan is None
+            else jnp.sum((fplan.silent | fplan.corrupt).astype(f32)))
+        metrics["faults_demoted"] = demoted
     return new_state, metrics
 
 

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena
+from repro.core import arena, faults
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, affine_case, arena_grad, cohort_batch, run_cohort_inner,
@@ -124,12 +124,25 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     x_K = run_cohort_inner(cfg, inner, (c_i_c,), batch_c,
                            per_step=per_step_batches)
 
-    # fused per-cohort tail: c_i' = c_i - c + (x_s - x_K)/(K eta)
-    c_i_new_c = ops.scaffold_cv(c_i_c, x_K, c_row, x_s_row, 1.0 / (K * eta))
+    # the wire corrupts the transmitted packet x_i^{r,K}; both uplinked
+    # variables (dx_i and dc_i) derive from it, so both see the corruption
+    fplan = faults.plan(cfg, state["round"], m)
+    plan_c = faults.take(fplan, idx)
+    x_t = faults.inject(cfg.faults, plan_c, x_K)
+    # fused per-cohort tail: c_i' = c_i - c + (x_s - x_t)/(K eta)
+    c_i_new_c = ops.scaffold_cv(c_i_c, x_t, c_row, x_s_row, 1.0 / (K * eta))
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep(cfg, x_t, x_s_row)
+    keep_c = faults.combine_mask(None, plan_c, keep)
+    if keep_c is not None:
+        # demoted/silent cohort rows: zero delta on both means, c_i kept
+        c_i_new_c = jnp.where(keep_c[:, None], c_i_new_c, c_i_c)
+        x_t = jnp.where(keep_c[:, None], x_t, x_s_row[None])
     # server: TWO all-reduces over the cohort's deltas (silent rows are zero)
     inv_m = 1.0 / m
     x_s_new = x_s_row + cfg.eta_g * inv_m * jnp.sum(
-        (x_K - x_s_row[None]).astype(jnp.float32), axis=0).astype(x_s_row.dtype)
+        (x_t - x_s_row[None]).astype(jnp.float32), axis=0).astype(x_s_row.dtype)
     c_new = c_row + inv_m * jnp.sum(
         (c_i_new_c - c_i_c).astype(jnp.float32), axis=0).astype(c_row.dtype)
     c_i_new = ops.row_scatter(c_i, idx, c_i_new_c)  # silent clients keep c_i
@@ -144,10 +157,14 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     metrics = {
         "c_sum_norm": jnp.linalg.norm(
             jnp.sum((c_i_new - c_new[None]).astype(f32), axis=0)),
-        "client_drift": jnp.mean(
-            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1)),
+        "client_drift": T.masked_client_mean(
+            jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)), axis=1),
+            keep_c),
         "used_arena": jnp.ones((), f32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, None if plan_c is None else ~plan_c.silent, keep)
     return new_state, metrics
 
 
@@ -171,18 +188,27 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
         per_step=per_step_batches, c_i=c_i, c_row=c_row,
     )
 
-    # fused per-client tail: c_i' = c_i - c + (x_s - x_K)/(K eta)
-    c_i_new = ops.scaffold_cv(c_i, x_K, c_row, x_s_row, 1.0 / (K * eta))
-    x_up = x_K
-    mask = None
+    # the wire corrupts the transmitted packet x_i^{r,K}; both uplinked
+    # variables (dx_i and dc_i) derive from it, so both see the corruption
+    fplan = faults.plan(cfg, state["round"], m)
+    x_t = faults.inject(cfg.faults, fplan, x_K)
+    # fused per-client tail: c_i' = c_i - c + (x_s - x_t)/(K eta)
+    c_i_new = ops.scaffold_cv(c_i, x_t, c_row, x_s_row, 1.0 / (K * eta))
+    x_up = x_t
+    pmask = None
     if cfg.participation < 1.0:
-        mask = T.participation_mask(
+        pmask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
         )
-        # silent clients transmit nothing: zero delta on both server means,
-        # control variate kept
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep(cfg, x_t, x_s_row)
+    mask = faults.combine_mask(pmask, fplan, keep)
+    if mask is not None:
+        # silent/demoted clients transmit nothing: zero delta on both server
+        # means, control variate kept
         c_i_new = jnp.where(mask[:, None], c_i_new, c_i)
-        x_up = jnp.where(mask[:, None], x_K, x_s_row[None])
+        x_up = jnp.where(mask[:, None], x_t, x_s_row[None])
     # server: TWO all-reduces (x-delta and c-delta)
     x_s_new = x_s_row + cfg.eta_g * (jnp.mean(x_up, axis=0) - x_s_row)
     c_new = c_row + jnp.mean(c_i_new - c_i, axis=0)
@@ -205,6 +231,9 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
             mask),
         "used_arena": jnp.ones((), f32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, faults.combine_mask(pmask, fplan, None), keep)
     return new_state, metrics
 
 
@@ -235,17 +264,24 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     # rounding as the fused arena kernel, so the parity tests compare paths
     # at f32 resolution instead of absorbing a divide-vs-multiply ulp
     alpha = 1.0 / (K * eta)
-    c_i_new = T.tmap(lambda ci, cc, s, xk: ci - cc + (s - xk) * alpha, c_i, c_b, x_s_b, x_K)
-    x_up = x_K
-    mask = None
+    fplan = faults.plan(cfg, state["round"], m)
+    x_t = faults.inject_tree(cfg.faults, fplan, x_K)
+    c_i_new = T.tmap(lambda ci, cc, s, xk: ci - cc + (s - xk) * alpha, c_i, c_b, x_s_b, x_t)
+    x_up = x_t
+    pmask = None
     if cfg.participation < 1.0:
-        mask = T.participation_mask(
+        pmask = T.participation_mask(
             participation_key(cfg, state["round"]), m, cfg.participation
         )
-        # silent clients transmit nothing (zero delta, c_i kept) -- same
-        # contract as the arena path
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep_tree(cfg, x_t, x_s)
+    mask = faults.combine_mask(pmask, fplan, keep)
+    if mask is not None:
+        # silent/demoted clients transmit nothing (zero delta, c_i kept) --
+        # same contract as the arena path
         c_i_new = T.tree_select(mask, c_i_new, c_i)
-        x_up = T.tree_select(mask, x_K, x_s_b)
+        x_up = T.tree_select(mask, x_t, x_s_b)
     # server: TWO all-reduces (x-delta and c-delta)
     dx = T.tree_client_mean(T.tree_sub(x_up, x_s_b))
     dc = T.tree_client_mean(T.tree_sub(c_i_new, c_i))
@@ -266,6 +302,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
             T.tree_client_sqnorms(T.tree_sub(x_K, x_s_b)), mask),
         "used_arena": jnp.zeros((), jnp.float32),
     }
+    if fplan is not None or keep is not None:
+        metrics |= faults.fault_metrics(
+            fplan, faults.combine_mask(pmask, fplan, None), keep)
     return new_state, metrics
 
 

@@ -404,6 +404,36 @@ def dual_from_uplink(uplink, x_s, rho, *, impl: Optional[str] = None,
     )
 
 
+def screen_uplink(u, ref, *, impl: Optional[str] = None,
+                  block: Optional[int] = None):
+    """Fused uplink screening (robustness layer): per-client finite flags
+    and squared deviations in ONE pass over the (m, width) uplink buffer.
+
+        finite_i = every entry of u_i is finite
+        sq_i     = sum over the FINITE entries of (u_i - ref)^2
+
+    The deviation excludes non-finite entries (the flag already demotes
+    those rows), so sq is always finite and comparable across backends.
+    ``ref``: (width,) broadcast downlink row -- deviation from x_s catches
+    sign flips, which a plain norm cannot -- or (m, width) per-row
+    reference (graph rounds screen each node against its own carry).
+    Returns ``(finite (m,) bool, sq (m,) f32)``.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        uf = u.astype(jnp.float32)
+        rf = ref.astype(jnp.float32)
+        if rf.ndim == 1:
+            rf = rf[None]
+        fin_e = jnp.isfinite(uf)
+        d = jnp.where(fin_e, uf - rf, 0.0)
+        return jnp.all(fin_e, axis=1), jnp.sum(d * d, axis=1)
+    from repro.kernels import screen as sk
+
+    return sk.screen_uplink_pallas(
+        u, ref, block=block, interpret=(impl == "pallas_interpret"))
+
+
 def _ef21_row_scales(rowmax, leaf_rows, lo: float):
     """Expand per-(client, leaf) maxima to per-128-lane-row scales.  The
     arena pads each leaf to a 128-lane multiple, so leaf boundaries fall on

@@ -16,12 +16,23 @@ counter, so save-at-r + resume equals the uninterrupted run at f32
 engine (``core.api.use_cohort``) feed cohort-sized batches from
 ``data.synthetic.cohort_lm_batches`` -- data is generated only for the
 clients that actually fire each round.
+
+Robustness (docs/robustness.md): ``--faults`` injects a deterministic fault
+schedule (``core.faults``), ``--screen`` gates the fused uplink screen, and
+``--watchdog`` arms a divergence watchdog -- after ``--watchdog-patience``
+consecutive bad logged rows (non-finite metrics, or server loss above
+``--watchdog-factor`` x the attempt's best) it rolls the full federated
+state back to the newest healthy checkpoint anchor and retries with the
+stepsize scaled by ``--eta-backoff``.  The fault trace is a pure function
+of (fault seed, round, client), so replayed rounds replay identical faults:
+screening remedies corruption, the watchdog remedies stepsize divergence.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import math
 import pathlib
 import time
 from functools import partial
@@ -31,7 +42,7 @@ import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro.configs import get_arch
-from repro.configs.base import FederatedConfig, ShapeConfig
+from repro.configs.base import FaultConfig, FederatedConfig, ShapeConfig
 from repro.core import make as make_fed
 from repro.core import make_scan_rounds
 from repro.core.api import use_arena, use_cohort
@@ -59,20 +70,37 @@ def run(
     uplink_bits: int | None = None,
     participation: float = 1.0,
     rounds_per_call: int = 1,
+    faults: str | FaultConfig | None = None,
+    screen: bool | str = "auto",
+    watchdog: bool = False,
+    watchdog_factor: float = 10.0,
+    watchdog_patience: int = 2,
+    eta_backoff: float = 0.5,
+    max_rollbacks: int = 3,
+    ckpt_every: int = 0,
+    ckpt_keep: int = 3,
+    expect_demotions: int = 0,
+    expect_rollbacks: int = 0,
 ):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
-    cfg = dataclasses.replace(
-        cfg,
-        fed=dataclasses.replace(
-            cfg.fed, algorithm=algorithm, inner_steps=k, eta=eta, num_clients=m,
-            layout="client_axis", uplink_bits=uplink_bits, participation=participation,
-            rounds_per_call=rounds_per_call,
-        ),
-    )
+    fault_cfg = FaultConfig.parse(faults) if isinstance(faults, str) else faults
+    if watchdog and not ckpt_dir:
+        raise ValueError("--watchdog needs --ckpt-dir (rollback anchors)")
+
+    def fed_cfg(scale: float) -> FederatedConfig:
+        # eta backoff after a rollback re-derives rho = 1/(K eta') too: the
+        # watchdog shrinks the stepsize of the whole primal-dual pair
+        return dataclasses.replace(
+            cfg.fed, algorithm=algorithm, inner_steps=k, eta=eta * scale,
+            num_clients=m, layout="client_axis", uplink_bits=uplink_bits,
+            participation=participation, rounds_per_call=rounds_per_call,
+            faults=fault_cfg, screen=screen,
+        )
+
+    cfg = dataclasses.replace(cfg, fed=fed_cfg(1.0))
     model = build_model(cfg)
-    fed = make_fed(cfg.fed)
 
     key = jax.random.key(seed)
     params = model.init(key)
@@ -86,8 +114,16 @@ def run(
         "seq_len": seq_len, "seed": seed, "uplink_bits": uplink_bits,
         "participation": participation,
     }
+    if fault_cfg is not None:
+        # the seeded fault trace is part of the trajectory, so it joins the
+        # fingerprint -- but only when a schedule is active, so checkpoints
+        # written before this launcher grew fault support still resume
+        run_config["faults"] = dataclasses.asdict(fault_cfg)
+        run_config["screen"] = screen if isinstance(screen, str) else bool(screen)
 
     start = 0
+    eta_scale = 1.0
+    state = None
     if resume:
         if not ckpt_dir:
             raise ValueError("--resume needs --ckpt-dir")
@@ -116,9 +152,12 @@ def run(
         # the job's memory
         state = payload["fed_state"]
         start = int(payload["round"])
-        print(f"[train] resumed full fed state at round {start} from {ckpt_dir}")
-    else:
-        state = fed.init(params, m)
+        # a watchdog-backed-off run resumes at its backed-off stepsize; the
+        # scale rides outside the fingerprint (it IS the same trajectory,
+        # continued at the eta the rollback settled on)
+        eta_scale = float(payload.get("eta_scale", 1.0))
+        print(f"[train] resumed full fed state at round {start} from {ckpt_dir}"
+              + (f" (eta_scale={eta_scale:g})" if eta_scale != 1.0 else ""))
     if start >= steps:
         print(f"[train] checkpoint already at round {start} >= steps {steps}; "
               f"nothing to do")
@@ -132,16 +171,20 @@ def run(
     # With rounds_per_call > 1 the scan driver runs R full rounds per
     # dispatch over a leading-R batch stack (metrics come back stacked).
     R = max(1, rounds_per_call)
-    if R > 1:
-        scan_rounds = make_scan_rounds(fed, client_grad)
 
-        @partial(jax.jit, donate_argnums=(0,))
-        def step_fn(state, batches):
-            return scan_rounds(state, batches)
-    else:
-        @partial(jax.jit, donate_argnums=(0,))
-        def step_fn(state, batch):
-            return fed.round(state, client_grad, batch)
+    def build(scale: float):
+        """(fed, step_fn, round_fn) at the given eta scale -- rebuilt after
+        every watchdog backoff so the jitted round sees the new stepsize."""
+        fed = make_fed(fed_cfg(scale))
+        round_fn = jax.jit(lambda s, b: fed.round(s, client_grad, b),
+                           donate_argnums=(0,))
+        if R > 1:
+            scan_rounds = make_scan_rounds(fed, client_grad)
+            step_fn = jax.jit(lambda s, b: scan_rounds(s, b),
+                              donate_argnums=(0,))
+        else:
+            step_fn = round_fn
+        return fed, step_fn, round_fn
 
     @jax.jit
     def eval_loss(params, batch):
@@ -155,15 +198,21 @@ def run(
     # cohort-sized leading dim) so data is never generated for silent clients
     cohort = use_cohort(cfg.fed, m) and use_arena(cfg.fed, params)
     n_rounds = steps - start
-    data_key = jax.random.key(seed + 1)
-    if cohort:
-        data = cohort_lm_batches(
-            data_key, n_rounds, m, per_client_batch, seq_len, cfg.vocab_size,
-            participation=participation, fed_seed=cfg.fed.seed, start=start,
-        )
-    else:
-        data = lm_batches(data_key, n_rounds, m, per_client_batch, seq_len,
-                          cfg.vocab_size, start=start)
+
+    def make_data(from_round: int):
+        # re-keyed from the starting round: a rollback (or --resume)
+        # regenerates the identical per-round stream the uninterrupted run
+        # would have seen from that round on
+        data_key = jax.random.key(seed + 1)
+        if cohort:
+            return cohort_lm_batches(
+                data_key, steps - from_round, m, per_client_batch, seq_len,
+                cfg.vocab_size, participation=participation,
+                fed_seed=cfg.fed.seed, start=from_round,
+            )
+        return lm_batches(data_key, steps - from_round, m, per_client_batch,
+                          seq_len, cfg.vocab_size, start=from_round)
+
     # cohort batches only cover the round's active clients, so evaluating
     # the server loss on them would track the cohort's topics, not the
     # population objective (incomparable across participation settings):
@@ -172,57 +221,148 @@ def run(
     if cohort:
         eval_batch = next(lm_batches(jax.random.key(seed + 2), 1, m,
                                      per_client_batch, seq_len, cfg.vocab_size))
-    t0 = time.time()
+
     def metrics_row(metrics):
         # last-round values, whether stacked (R,) from the scan or scalars
         return {kk: float(jnp.asarray(v).reshape(-1)[-1])
                 for kk, v in metrics.items() if kk != "trace"}
 
-    if R > 1:
-        # tail shorter than R (steps % R != 0) falls back to jitted,
-        # donated per-round dispatches -- same step semantics, no eager path
-        round_fn = jax.jit(
-            lambda s, b: fed.round(s, client_grad, b), donate_argnums=(0,))
-        pending = []
-        i = start
-        last = metrics = None
-        for batch in data:
-            pending.append(batch)
-            last = batch
-            if len(pending) < R:
-                continue
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *pending)
-            pending = []
-            state, metrics = step_fn(state, stacked)  # metrics stacked (R,)
-            i += R
-            if (i - R) // max(1, log_every) != i // max(1, log_every):
-                eb = eval_batch if eval_batch is not None else last
-                row = {"round": i,
-                       "server_loss": float(eval_loss(fed.server_params(state), eb)),
-                       **metrics_row(metrics)}
-                history.append(row)
-                print(f"[train] {json.dumps(row)}", flush=True)
-        for batch in pending:
-            state, metrics = round_fn(state, batch)
-            i += 1
-        if last is not None and (not history or history[-1]["round"] != i):
-            # always log the FINAL state (the R=1 path's i == steps-1 row)
-            eb = eval_batch if eval_batch is not None else last
+    class _Watchdog:
+        """Trips after ``watchdog_patience`` consecutive bad logged rows; a
+        row is bad when any metric is non-finite or the server loss exceeds
+        ``watchdog_factor`` x this attempt's best loss."""
+
+        def __init__(self):
+            self.best = math.inf
+            self.strikes = 0
+
+        def note(self, row) -> bool:
+            bad = (any(not math.isfinite(v) for v in row.values()
+                       if isinstance(v, float))
+                   or row["server_loss"] > watchdog_factor * self.best)
+            if bad:
+                self.strikes += 1
+            else:
+                self.strikes = 0
+                self.best = min(self.best, row["server_loss"])
+            return self.strikes >= watchdog_patience
+
+    injected_total = demoted_total = 0.0
+    last_saved = None
+
+    def note_faults(metrics):
+        # fault counters sum over every executed dispatch (stacked (R,) rows
+        # from the scan included), so the end-of-run summary covers rounds a
+        # rollback later replayed too
+        nonlocal injected_total, demoted_total
+        if metrics and "faults_demoted" in metrics:
+            injected_total += float(jnp.sum(jnp.asarray(metrics["faults_injected"])))
+            demoted_total += float(jnp.sum(jnp.asarray(metrics["faults_demoted"])))
+
+    def save_anchor(fed, state, scale):
+        done = int(state["round"])
+        ckpt.save(ckpt_dir, done, {
+            "server": fed.server_params(state),
+            "fed_state": state,
+            "round": done,
+            "config": run_config,
+            "eta_scale": scale,
+        }, keep=ckpt_keep)
+        return done
+
+    def attempt(fed, step_fn, round_fn, state, from_round, scale, wd):
+        """One trajectory attempt from ``from_round``; returns
+        ``(state, "done" | "diverged")``."""
+        nonlocal last_saved
+        data = make_data(from_round)
+
+        def log_round(i, state, metrics, eb):
+            nonlocal last_saved
             row = {"round": i,
                    "server_loss": float(eval_loss(fed.server_params(state), eb)),
                    **(metrics_row(metrics) if metrics is not None else {})}
             history.append(row)
             print(f"[train] {json.dumps(row)}", flush=True)
-    else:
-        for i, batch in enumerate(data, start=start):
+            diverged = wd.note(row) if wd is not None else False
+            healthy = (math.isfinite(row["server_loss"])
+                       and (wd is None or wd.strikes == 0))
+            if (ckpt_dir and ckpt_every > 0 and healthy
+                    and (last_saved is None or i - last_saved >= ckpt_every)):
+                save_anchor(fed, state, scale)
+                last_saved = i
+            return diverged
+
+        if R > 1:
+            # tail shorter than R (steps % R != 0) falls back to jitted,
+            # donated per-round dispatches -- same step semantics, no eager
+            # path
+            pending = []
+            i = from_round
+            last = metrics = None
+            for batch in data:
+                pending.append(batch)
+                last = batch
+                if len(pending) < R:
+                    continue
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *pending)
+                pending = []
+                state, metrics = step_fn(state, stacked)  # metrics stacked (R,)
+                note_faults(metrics)
+                i += R
+                if (i - R) // max(1, log_every) != i // max(1, log_every):
+                    eb = eval_batch if eval_batch is not None else last
+                    if log_round(i, state, metrics, eb):
+                        return state, "diverged"
+            for batch in pending:
+                state, metrics = round_fn(state, batch)
+                note_faults(metrics)
+                i += 1
+            if last is not None and (not history or history[-1]["round"] != i):
+                # always log the FINAL state (the R=1 path's i == steps-1 row)
+                eb = eval_batch if eval_batch is not None else last
+                if log_round(i, state, metrics, eb):
+                    return state, "diverged"
+            return state, "done"
+
+        for i, batch in enumerate(data, start=from_round):
             state, metrics = step_fn(state, batch)
-            if (i - start) % log_every == 0 or i == steps - 1:
+            note_faults(metrics)
+            if (i - from_round) % log_every == 0 or i == steps - 1:
                 eb = eval_batch if eval_batch is not None else batch
-                loss = float(eval_loss(fed.server_params(state), eb))
-                row = {"round": i, "server_loss": loss,
-                       **{kk: float(v) for kk, v in metrics.items() if kk != "trace"}}
-                history.append(row)
-                print(f"[train] {json.dumps(row)}", flush=True)
+                if log_round(i, state, metrics, eb):
+                    return state, "diverged"
+        return state, "done"
+
+    t0 = time.time()
+    rollbacks = 0
+    wd = _Watchdog() if watchdog else None
+    fed, step_fn, round_fn = build(eta_scale)
+    if state is None:
+        state = fed.init(params, m)
+    if wd is not None and ckpt.latest_step(ckpt_dir) is None:
+        # round-start anchor: the very first divergence has somewhere to
+        # roll back to
+        last_saved = save_anchor(fed, state, eta_scale)
+    while True:
+        state, status = attempt(fed, step_fn, round_fn, state, start,
+                                eta_scale, wd)
+        if status == "done":
+            break
+        rollbacks += 1
+        if rollbacks > max_rollbacks:
+            raise RuntimeError(
+                f"divergence watchdog: {rollbacks} rollbacks exceeded "
+                f"max_rollbacks={max_rollbacks} (eta_scale={eta_scale:g}); "
+                f"the run does not converge at any tried stepsize")
+        anchor = ckpt.latest_step(ckpt_dir)
+        payload = ckpt.load(ckpt_dir, anchor)
+        state = payload["fed_state"]
+        start = int(payload["round"])
+        eta_scale *= eta_backoff
+        wd = _Watchdog()
+        print(f"[train] watchdog: diverged; rolled back to round {start}, "
+              f"eta_scale -> {eta_scale:g}", flush=True)
+        fed, step_fn, round_fn = build(eta_scale)
     dt = time.time() - t0
     print(f"[train] {n_rounds} rounds (K={k}, m={m}) in {dt:.1f}s; algo={algorithm}, "
           f"rounds_per_call={R}" + (", cohort batches" if cohort else ""))
@@ -237,8 +377,21 @@ def run(
             "fed_state": state,
             "round": done,
             "config": run_config,
+            "eta_scale": eta_scale,
         })
         print(f"[train] full-state checkpoint (round {done}) saved to {ckpt_dir}")
+    if fault_cfg is not None or watchdog:
+        print(f"[train] robustness: faults_injected={injected_total:.0f} "
+              f"demoted={demoted_total:.0f} rollbacks={rollbacks} "
+              f"eta_scale={eta_scale:g}")
+    if expect_demotions and demoted_total < expect_demotions:
+        raise RuntimeError(
+            f"expected >= {expect_demotions} screened demotions, "
+            f"saw {demoted_total:.0f}")
+    if expect_rollbacks and rollbacks < expect_rollbacks:
+        raise RuntimeError(
+            f"expected >= {expect_rollbacks} watchdog rollbacks, "
+            f"saw {rollbacks}")
     return history
 
 
@@ -267,13 +420,48 @@ def main():
                          "< 1 runs the cohort-sampled round engine)")
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="rounds per jitted dispatch (lax.scan round batching)")
+    ap.add_argument("--log-every", type=int, default=5,
+                    help="rounds between logged rows (the watchdog and the "
+                         "periodic anchors act at logged rows)")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic fault schedule, e.g. "
+                         "'dropout=0.1,corrupt=0.05,seed=7' -- pure in "
+                         "(seed, round, client), so the trace replays exactly")
+    ap.add_argument("--screen", default="auto", choices=["auto", "on", "off"],
+                    help="fused uplink screening (auto = on iff faults active)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="divergence watchdog: roll back to the newest healthy "
+                         "checkpoint with eta backoff (needs --ckpt-dir)")
+    ap.add_argument("--watchdog-factor", type=float, default=10.0,
+                    help="a logged loss above factor x best counts as bad")
+    ap.add_argument("--watchdog-patience", type=int, default=2,
+                    help="consecutive bad logged rows before rollback")
+    ap.add_argument("--eta-backoff", type=float, default=0.5,
+                    help="eta multiplier applied on each rollback")
+    ap.add_argument("--max-rollbacks", type=int, default=3)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save a rollback anchor every N logged rounds "
+                         "(0 = final checkpoint only)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retain only the newest N anchors")
+    ap.add_argument("--expect-demotions", type=int, default=0,
+                    help="fail unless >= N uplinks were demoted (chaos CI gate)")
+    ap.add_argument("--expect-rollbacks", type=int, default=0,
+                    help="fail unless >= N rollbacks happened (chaos CI gate)")
     args = ap.parse_args()
     run(
         args.arch, reduced=args.reduced, steps=args.steps, algorithm=args.algorithm,
         k=args.k, eta=args.eta, m=args.clients, per_client_batch=args.batch,
         seq_len=args.seq, seed=args.seed, ckpt_dir=args.ckpt_dir, resume=args.resume,
         uplink_bits=args.uplink_bits, participation=args.participation,
-        rounds_per_call=args.rounds_per_call,
+        rounds_per_call=args.rounds_per_call, log_every=args.log_every,
+        faults=args.faults,
+        screen={"auto": "auto", "on": True, "off": False}[args.screen],
+        watchdog=args.watchdog, watchdog_factor=args.watchdog_factor,
+        watchdog_patience=args.watchdog_patience, eta_backoff=args.eta_backoff,
+        max_rollbacks=args.max_rollbacks, ckpt_every=args.ckpt_every,
+        ckpt_keep=args.ckpt_keep, expect_demotions=args.expect_demotions,
+        expect_rollbacks=args.expect_rollbacks,
     )
 
 
