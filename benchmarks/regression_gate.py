@@ -10,7 +10,10 @@ algorithm the paper's figures compare now has its arena hot path guarded --
 a regression in any one of them would silently skew the cross-algorithm
 wall-time story.  ISSUE 5 adds the (gpdmm, partial, arena_cohort) cell: the
 cohort-sampled partial-participation round whose whole point is being
-cheaper than the masked full-population round.
+cheaper than the masked full-population round.  ISSUE 7 adds the
+(gpdmm, stale, arena) cell: the bounded-staleness async round (delay
+schedule + fused stale_mix admission), guarded so the robustness layer
+never silently taxes the async hot path.
 
 Hardware neutrality: the committed baseline was produced on a different
 machine than the CI runner, and absolute wall times swing with runner
@@ -48,6 +51,10 @@ GATED = [
     # fused cohort inner loop -> scatter); normalised by the same-run pytree
     # partial sibling like every arena cell
     {"algo": "gpdmm", "variant": "partial", "path": "arena_cohort"},
+    # ISSUE 7: the bounded-staleness async round (delay schedule, fused
+    # stale_mix admission at max_staleness=2); normalised by its same-run
+    # pytree stale sibling like every arena cell
+    {"algo": "gpdmm", "variant": "stale", "path": "arena"},
 ]
 # "topology" (ISSUE 4) distinguishes the gpdmm_graph rows (star/ring/
 # complete at the same problem shape); records predating it key as None

@@ -6,7 +6,9 @@ ISSUE 3 cross-algorithm rows (SCAFFOLD and FedAvg on the same arena fast
 path, so every paper figure comparing them against GPDMM/AGPDMM measures the
 ALGORITHM, not a per-leaf-pytree implementation tax), and the ISSUE 4
 topology rows: decentralized graph-PDMM (ring vs star vs complete) at the
-lm_flat shape plus the neighbor-reduce kernel cell.
+lm_flat shape plus the neighbor-reduce kernel cell, and the ISSUE 7 async
+rows: the fused stale_mix admission kernel plus whole-round gpdmm cells
+under a delay schedule at max_staleness in {0, 2, 4}.
 
 The federated round is memory-bound elementwise math over the stacked
 ``(m, params)`` client state, so the figure of merit is full-state HBM
@@ -482,6 +484,91 @@ def bench_screen(problem: str = "lm_flat", K: int = 4):
     return records
 
 
+# ISSUE 7: bounded-staleness async rounds -- the fused stale_mix admission
+# kernel alone, plus whole-round gpdmm cells under a delay schedule at
+# max_staleness in {0, 2, 4} on BOTH the arena and pytree paths.  The
+# pytree sibling is what lets the regression gate normalise the gated
+# (gpdmm, stale, arena) cell by the same run's reference path; the
+# max_staleness=0 cell times the engine at its synchronous collapse point
+# (nothing is ever admitted, the mix is the bitwise masked select).
+STALE_MAXES = (0, 2, 4)
+
+
+def stale_round_passes(K: int, *, arena: bool) -> int:
+    """Analytic passes of the async gpdmm round: the faulted masked round
+    pays the partial-variant selects (uplink covering + x_c carry); on the
+    arena the fused stale_mix (3r + 2w: uplink, cache, buffer in; mixed,
+    buffer' out) REPLACES the 3-pass uplink select (+2 net), on the pytree
+    path the per-leaf mix (2r + 1w) and the buffer-store select (2r + 1w)
+    stack on top of it (+6)."""
+    base = round_passes("gpdmm", "partial", K, arena=arena,
+                        multi_leaf=False, oracle="native" if arena else "tree")
+    return base + (2 if arena else 6)
+
+
+def bench_stale(problem: str = "lm_flat", K: int = 4):
+    jax.clear_caches()
+    spec = PROBLEMS[problem]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    n = sum(int(jnp.size(v)) for v in params.values())
+    width = arena.ArenaSpec.from_tree(params).width
+    records = []
+
+    # kernel-alone cell: ONE fused pass over the uplink/cache/stale-buffer
+    # arenas emitting the mixed contribution rows + the updated buffer
+    u = jax.random.normal(jax.random.key(9), (m, width))
+    cache = jax.random.normal(jax.random.key(10), (m, width))
+    buf = jax.random.normal(jax.random.key(11), (m, width))
+    fresh = jnp.arange(m) % 3 != 0
+    store = jnp.arange(m) % 4 == 0
+    w = jnp.where(jnp.arange(m) % 2 == 0, 0.5, 0.0).astype(jnp.float32)
+    impls = ["xla"] + (["pallas"] if jax.default_backend() == "tpu" else [])
+    for impl in impls:
+        fn = jax.jit(lambda uu: ops.stale_mix(uu, cache, buf, fresh, store,
+                                              w, impl=impl))
+        us = time_fn(fn, u)
+        # 3 reads (uplink, cache, buffer) + 2 writes (mixed, buffer')
+        gbps = 5 * m * width * 4 / (us * 1e-6) / 1e9
+        emit(f"stale_mix_{problem}_{impl}", us, f"effective_GBps={gbps:.2f}")
+        records.append({
+            "problem": problem, "algo": "stale_mix", "variant": "plain",
+            "path": f"kernel_{impl}", "oracle": "native", "driver": "per_call",
+            "m": m, "n_params": n, "K": 0,
+            "us_per_round": round(us, 1),
+            "hbm_passes": 5,
+            "state_bytes": m * n * 4,
+            "effective_GBps": round(gbps, 2),
+        })
+
+    batch = {"dummy": jnp.zeros((m, 1))}
+    for ms in STALE_MAXES:
+        # the max_staleness=2 cell keys as plain "stale" (regression-gated
+        # with its pytree sibling); the sweep cells key as stale0 / stale4
+        variant = "stale" if ms == 2 else f"stale{ms}"
+        cell_us = {}
+        for use_arena in (True, False):
+            cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=0.1,
+                                  use_arena=use_arena,
+                                  faults=FaultConfig(delay=0.3, seed=9),
+                                  max_staleness=ms, async_rounds=True)
+            opt = make(cfg)
+            state = opt.init(jax.tree.map(jnp.copy, params), m)
+            oracle = "native" if use_arena else "tree"
+            grad = ORACLES[oracle]
+            fn = jax.jit(lambda s: opt.round(s, grad, batch)[0])
+            us = time_fn(fn, state)
+            path = "arena" if use_arena else "pytree"
+            cell_us[path] = us
+            records.append(_record(problem, "gpdmm", variant, path, oracle,
+                                   "per_round", m, n, K,
+                                   us, stale_round_passes(K, arena=use_arena)))
+        print(f"  -> {problem}/gpdmm/{variant}: max_staleness={ms}, "
+              f"pytree {cell_us['pytree']:.0f} -> arena "
+              f"{cell_us['arena']:.0f} us/round")
+    return records
+
+
 def run(out_path: str = "BENCH_round.json"):
     trajectory = []
     for problem in PROBLEMS:
@@ -491,8 +578,20 @@ def run(out_path: str = "BENCH_round.json"):
     trajectory.extend(bench_cohort())
     trajectory.extend(bench_topology())
     trajectory.extend(bench_screen())
+    trajectory.extend(bench_stale())
     payload = {
         "bench": "round_bench",
+        "stale_note": "stale_mix rows (ISSUE 7) time the fused bounded-"
+                "staleness admission kernel alone -- ONE pass over the "
+                "uplink/cache/stale-buffer arenas (3r + 2w) emitting the "
+                "mixed contribution rows and the updated buffer "
+                "(kernel_pallas appears when a TPU is present).  The gpdmm "
+                "stale / stale0 / stale4 rows run the whole async round "
+                "under a 30% delay schedule at max_staleness = 2 / 0 / 4 on "
+                "both layouts; stale0 is the synchronous collapse point "
+                "(nothing admitted, the mix is the bitwise masked select), "
+                "and the (gpdmm, stale, arena) cell is regression-gated "
+                "against its same-run pytree sibling.",
         "screen_note": "screen_uplink rows (ISSUE 6) time the fused "
                 "robustness screen alone -- ONE pass over the (m, width) "
                 "uplink arena emitting per-client finite flags + squared "

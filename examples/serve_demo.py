@@ -1,10 +1,109 @@
-"""Batched serving demo: prefill a prompt batch, decode tokens with each
-cache type (full KV for a dense arch, O(1) recurrent state for RWKV-6).
+"""Train-while-serve demo (ISSUE 7): checkpoint hot-swap end to end.
+
+A trainer subprocess writes full-state checkpoint anchors every round while
+THIS process serves query batches from the same directory via the hot-swap
+watcher (``launch.serve.run_watch``): the server picks up each new anchor
+between query batches, and a deliberately truncated checkpoint file is
+REJECTED loudly while serving continues from the last good step.
 
     PYTHONPATH=src python examples/serve_demo.py
-"""
-from repro.launch.serve import run
 
-for arch in ["olmo-1b", "rwkv6-1.6b", "recurrentgemma-9b"]:
+Phases:
+  1. train rounds 0..3 and stop (anchors step_1..3 on disk);
+  2. plant a truncated file at a far-future step -- the newest file in the
+     directory is now garbage, which is exactly the case ``latest_step``
+     alone cannot survive;
+  3. start the hot-swap server in a thread: it must reject the planted file
+     and serve step 3;
+  4. resume the trainer to round 6 while the server keeps answering queries
+     -- the served step must advance as new anchors land.
+
+The batched static-serving demo (prefill + per-arch decode cache) stays at
+the end.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+from repro import checkpoint as ckpt
+from repro.launch.serve import run as serve_once
+from repro.launch.serve import run_watch
+
+REPO_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+ENV = {**os.environ, "PYTHONPATH": REPO_SRC}
+
+
+def train(ckpt_dir: str, steps: int, *, resume: bool = False):
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", "olmo-1b",
+           "--steps", str(steps), "--k", "1", "--eta", "0.05",
+           "--clients", "2", "--batch", "2", "--seq", "32",
+           "--log-every", "1", "--ckpt-dir", ckpt_dir, "--ckpt-every", "1"]
+    if resume:
+        cmd.append("--resume")
+    subprocess.run(cmd, check=True, env=ENV)
+
+
+with tempfile.TemporaryDirectory() as d:
+    print("=== phase 1: train rounds 0..3 ===", flush=True)
+    train(d, 3)
+    assert ckpt.steps(d), "trainer wrote no anchors"
+
+    print("=== phase 2: plant a truncated checkpoint at the newest step ===",
+          flush=True)
+    fake = pathlib.Path(d) / "step_99999999.msgpack"
+    fake.write_bytes(b"\x00" * 37)  # unreadable msgpack, newest by name
+
+    print("=== phase 3+4: serve while the trainer resumes to round 6 ===",
+          flush=True)
+    rows: list = []
+    stop = threading.Event()
+    out: dict = {}
+
+    def serve_loop():
+        out["history"], out["watcher"] = run_watch(
+            "olmo-1b", ckpt_dir=d, batch=2, prompt_len=16, new_tokens=2,
+            poll_interval=0.2, duration=600.0, wait_first=30.0,
+            stop_when=stop.is_set, history=rows)
+
+    th = threading.Thread(target=serve_loop)
+    th.start()
+    try:
+        t0 = time.time()
+        while not rows:  # server up and answering before the trainer resumes
+            assert th.is_alive(), "serve thread died before the first query"
+            assert time.time() - t0 < 120, "server never answered a query"
+            time.sleep(0.2)
+        first_step = rows[0]["step"]
+
+        train(d, 6, resume=True)
+        t0 = time.time()
+        while rows[-1]["step"] < 6 and time.time() - t0 < 30:
+            time.sleep(0.2)  # grace: let the watcher poll the final anchor
+    finally:
+        stop.set()
+        th.join(timeout=120)
+    assert not th.is_alive(), "serve thread failed to stop"
+
+    history, watcher = out["history"], out["watcher"]
+    served = sorted({row["step"] for row in history})
+    rounds = sorted({row["round"] for row in history})
+    print(f"[demo] served steps {served}, rounds {rounds}, "
+          f"swaps={watcher.swaps} rejected={watcher.failures}")
+    assert watcher.failures >= 1, "truncated checkpoint was never rejected"
+    assert 99999999 in watcher.bad, "the planted file was not the reject"
+    assert first_step <= 3, f"first served step {first_step} not from phase 1"
+    assert len(served) >= 2, f"served step never advanced: {served}"
+    assert max(rounds) > min(rounds), f"served round never advanced: {rounds}"
+    steps_seq = [row["step"] for row in history]
+    assert steps_seq == sorted(steps_seq), "served step went backwards"
+    print("[demo] hot-swap serving OK: truncated anchor rejected, "
+          "served round advanced with training")
+
+print("\n=== static batched serving (per-arch decode caches) ===")
+for arch in ["olmo-1b", "rwkv6-1.6b"]:
     print(f"\n=== {arch} (reduced config) ===")
-    run(arch, reduced=True, batch=4, prompt_len=32, new_tokens=8)
+    serve_once(arch, reduced=True, batch=4, prompt_len=32, new_tokens=8)

@@ -1,4 +1,4 @@
 """msgpack-based pytree checkpointing (substrate; no orbax offline)."""
-from repro.checkpoint.msgpack_ckpt import load, save, latest_step
+from repro.checkpoint.msgpack_ckpt import load, save, latest_step, steps
 
-__all__ = ["save", "load", "latest_step"]
+__all__ = ["save", "load", "latest_step", "steps"]

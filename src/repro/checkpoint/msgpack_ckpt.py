@@ -80,12 +80,19 @@ def save(path: str | os.PathLike, step: int, tree: Any, *,
     return str(final)
 
 
-def latest_step(path: str | os.PathLike) -> Optional[int]:
+def steps(path: str | os.PathLike) -> list[int]:
+    """All on-disk checkpoint steps, ascending.  Consumers that must survive
+    a bad newest file (the hot-swap serving watcher) walk this list from the
+    tail instead of trusting ``latest_step`` alone."""
     path = pathlib.Path(path)
     if not path.exists():
-        return None
-    steps = [int(p.stem.split("_")[1]) for p in path.glob("step_*.msgpack")]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(p.stem.split("_")[1]) for p in path.glob("step_*.msgpack"))
+
+
+def latest_step(path: str | os.PathLike) -> Optional[int]:
+    all_steps = steps(path)
+    return all_steps[-1] if all_steps else None
 
 
 def load(path: str | os.PathLike, step: Optional[int] = None) -> Any:

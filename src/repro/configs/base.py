@@ -49,22 +49,27 @@ class FaultConfig:
     ``core.faults.plan`` folds the round counter into ``seed`` -- so a fault
     trace replays EXACTLY across reruns, resumes, and watchdog rollbacks.
 
-    Three silence classes -- ``dropout`` (the client crashed), ``straggler``
-    (missed the round barrier), ``delay`` (the downlink never arrived, so
-    the client sat the round out) -- all map onto the u_hat silence
+    Two hard silence classes -- ``dropout`` (the client crashed) and
+    ``straggler`` (missed the round barrier) -- map onto the u_hat silence
     contract: the server reuses its cached uplink for the round, exactly as
-    for a participation-masked client.  ``corrupt`` clients DO transmit, but
-    the wire mangles the packet (NaN row / Inf row / sign flip / ``blowup``
-    x magnitude; the class is drawn per client) -- the faults uplink
-    screening (``FederatedConfig.screen``) exists to catch.
+    for a participation-masked client.  ``delay`` is the SOFT class: with
+    the bounded-staleness engine on (``core.faults.async_on``) a delayed
+    client's uplink lands ``s in [1, delay_max]`` rounds late through the
+    stale buffer (``core.staleness``); with the engine off -- the default,
+    and always on non-star topologies -- ``delay`` degrades to silence,
+    bit-identical to the pre-async behaviour.  ``corrupt`` clients DO
+    transmit, but the wire mangles the packet (NaN row / Inf row / sign
+    flip / ``blowup`` x magnitude; the class is drawn per client) -- the
+    faults uplink screening (``FederatedConfig.screen``) exists to catch.
     """
 
     dropout: float = 0.0    # P(client never returns this round)
     straggler: float = 0.0  # P(client misses the round barrier)
-    delay: float = 0.0      # P(downlink x_s lost -> client sits the round out)
+    delay: float = 0.0      # P(uplink delayed s rounds; silence if async off)
     corrupt: float = 0.0    # P(transmitted uplink mangled on the wire)
     blowup: float = 1e6     # magnitude multiplier of the "blowup" corruption
     seed: int = 1234        # fault RNG seed, independent of the data/mask seeds
+    delay_max: int = 4      # lateness s drawn uniformly from [1, delay_max]
 
     def __post_init__(self):
         for name in ("dropout", "straggler", "delay", "corrupt"):
@@ -72,6 +77,10 @@ class FaultConfig:
             if not (0.0 <= v <= 1.0):
                 raise ValueError(
                     f"fault rate {name} must be in [0, 1], got {v}")
+        if self.delay_max < 1:
+            raise ValueError(
+                f"delay_max must be a positive lateness bound, got "
+                f"{self.delay_max}")
 
     @property
     def any(self) -> bool:
@@ -92,7 +101,7 @@ class FaultConfig:
                 raise ValueError(
                     f"unknown fault field {key!r} (have "
                     f"{sorted(cls.__dataclass_fields__)})")
-            kwargs[key] = int(val) if key == "seed" else float(val)
+            kwargs[key] = int(val) if key in ("seed", "delay_max") else float(val)
         return cls(**kwargs)
 
 
@@ -235,6 +244,30 @@ class FederatedConfig:
     # reference exceeds screen_mult x the round median.  <= 0 disables the
     # outlier rule (non-finite screening still applies).
     screen_mult: float = 100.0
+    # Bounded-staleness async round engine (core.staleness, ISSUE 7): give
+    # the ``delay`` fault class real semantics -- a delayed client's uplink
+    # lands s rounds late through a stale-buffer arena and is admitted into
+    # the server mean with a staleness-discounted weight gamma**s iff
+    # s <= max_staleness, the stale-update regime asynchronous PDMM
+    # converges under (Sherson et al., arXiv:1706.02654; Zhang & Heusdens,
+    # arXiv:1702.00841).  "auto" (default) engages exactly when the knobs
+    # deviate from the synchronous point (max_staleness > 0 or a finite
+    # deadline) AND a delay schedule is active on a star topology; True
+    # forces the engine (at the synchronous knobs it is bitwise-identical
+    # to the masked round -- tests/test_staleness.py pins this), False
+    # keeps delay = silence.
+    async_rounds: bool | str = "auto"
+    # Straggler deadline, in rounds: a delayed client whose drawn lateness
+    # exceeds it is demoted to the silence contract AT PLAN TIME (its
+    # uplink never enters the stale buffer).  inf = wait for any lateness.
+    deadline: float = float("inf")
+    # Admission bound on arriving stale uplinks: a row that is s rounds
+    # late is admitted iff s <= max_staleness, else dropped (the u_hat
+    # cache covers the client).  0 = admit nothing (synchronous point).
+    max_staleness: int = 0
+    # Staleness discount: an admitted row s rounds late is mixed toward the
+    # server's cached view with weight stale_gamma**s.
+    stale_gamma: float = 0.5
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -250,6 +283,20 @@ class FederatedConfig:
         if self.screen not in (True, False, "auto"):
             raise ValueError(
                 f"screen must be True, False or 'auto', got {self.screen!r}")
+        if self.async_rounds not in (True, False, "auto"):
+            raise ValueError(
+                f"async_rounds must be True, False or 'auto', got "
+                f"{self.async_rounds!r}")
+        if not self.deadline > 0.0:
+            raise ValueError(
+                f"deadline must be a positive round count (inf = no "
+                f"deadline), got {self.deadline}")
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}")
+        if not (0.0 < self.stale_gamma <= 1.0):
+            raise ValueError(
+                f"stale_gamma must be in (0, 1], got {self.stale_gamma}")
         # cohort_tile must divide the cohort size (core.api.map_cohort_tiles
         # would only raise at trace time, deep inside a jit).  Checkable here
         # whenever the population is known; a tile >= the cohort is fine --

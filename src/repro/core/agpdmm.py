@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena, faults
+from repro.core import arena, faults, staleness
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, cohort_batch, resolved_rho, run_cohort_inner, use_arena,
@@ -134,7 +134,13 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     if faults.screening_on(cfg):
         keep = faults.screen_keep_tree(cfg, uplink, x_s)
     mask = faults.combine_mask(pmask, fplan, keep)
-    if mask is not None:
+    sm = {}
+    if faults.async_on(cfg):
+        # bounded-staleness engine: delayed rows buffer, arrivals mix
+        uplink, mask, stale_up, sm = staleness.step_tree(
+            cfg, fplan, uplink, state["u_hat"], mask, state)
+        new_state |= stale_up
+    elif mask is not None:
         uplink = T.tree_select(mask, uplink, state["u_hat"])
     if "u_hat" in state:
         new_state["u_hat"] = uplink
@@ -152,8 +158,10 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
         "used_arena": jnp.zeros((), jnp.float32),
     }
     if fplan is not None or keep is not None:
-        metrics |= faults.fault_metrics(
-            fplan, faults.combine_mask(pmask, fplan, None), keep)
+        tx = faults.combine_mask(pmask, fplan, None)
+        if faults.async_on(cfg):
+            tx = staleness.fresh_mask(tx, fplan)
+        metrics |= faults.fault_metrics(fplan, tx, keep) | sm
     return new_state, metrics
 
 
@@ -170,6 +178,8 @@ def make(cfg: FederatedConfig) -> FedOpt:
                     or faults.needs_cache(cfg)):
                 row = spec.pack(params)
                 st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
+            if faults.async_on(cfg):
+                st |= staleness.init_arena(spec, m)
             return st
         st = {
             "x_s": params,
@@ -179,6 +189,8 @@ def make(cfg: FederatedConfig) -> FedOpt:
         if (cfg.uplink_bits is not None or cfg.participation < 1.0
                 or faults.needs_cache(cfg)):
             st["u_hat"] = T.tree_broadcast(params, m)  # EF21/async server view
+        if faults.async_on(cfg):
+            st |= staleness.init_tree(params, m)
         return st
 
     return FedOpt(

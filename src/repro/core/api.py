@@ -188,6 +188,13 @@ def use_cohort(cfg: FederatedConfig, m: int) -> bool:
         return False
     if cfg.algorithm not in COHORT_ALGOS or cfg.topology != "star":
         return False
+    # the bounded-staleness engine (core.staleness) needs the FULL population
+    # each round -- a delayed client outside the cohort still has a slot to
+    # age/arrive -- so async rounds pin the masked full-population path
+    from repro.core import faults
+
+    if faults.async_on(cfg):
+        return False
     if cfg.cohort == "auto":
         from repro.core import tree_util as T
 

@@ -1,16 +1,26 @@
 """Deterministic fault injection + screening-to-silence (the robustness
 layer shared by every round engine, ISSUE 6).
 
-The design maps EVERY client fault onto the silence contract the round
-engines already implement for partial participation (PR 5 pinned the
+The design maps client faults onto the silence contract the round engines
+already implement for partial participation (PR 5 pinned the
 ``(sum_active uplink + sum_silent u_hat) / m`` identity bit-identically):
 
-* A **silent** client (dropout / straggler / delayed downlink -- it never
-  returns this round) simply contributes its cached ``u_hat`` row, exactly
-  as a participation-masked client.  Stochastic/asynchronous PDMM with
-  randomly inactive nodes converges (Sherson et al., arXiv:1706.02654;
-  Zhang & Heusdens, arXiv:1702.00841), so silence is the one graceful
-  degradation with theory attached.
+* A **silent** client (dropout / straggler -- it never returns this round)
+  simply contributes its cached ``u_hat`` row, exactly as a
+  participation-masked client.  Stochastic/asynchronous PDMM with randomly
+  inactive nodes converges (Sherson et al., arXiv:1706.02654; Zhang &
+  Heusdens, arXiv:1702.00841), so silence is the one graceful degradation
+  with theory attached.
+* A **delayed** client (the soft class, ISSUE 7) finished its inner steps
+  but its uplink is in flight for a drawn lateness of ``s`` rounds.  With
+  the bounded-staleness engine on (``async_on``) the round routes the row
+  through the stale buffer (``core.staleness``): it is stored this round,
+  arrives ``s`` rounds later, and is admitted into the server mean with
+  weight ``stale_gamma**s`` iff ``s <= max_staleness`` -- the stale-update
+  regime of the same asynchronous-PDMM theory.  A lateness beyond
+  ``deadline`` is demoted to plain silence AT PLAN TIME.  With the engine
+  off (the default, and always on non-star topologies) ``delay`` IS a
+  silence class, bit-identical to the pre-async behaviour.
 * A **corrupt** client transmits, but the wire mangles the packet (NaN row,
   Inf row, sign flip, or a ``blowup``-scaled magnitude).  Uplink screening
   (``ops.screen_uplink``) detects the row in one fused pass -- per-client
@@ -30,6 +40,7 @@ exactly across reruns, ``--resume``, and watchdog rollbacks
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Optional
 
 import jax
@@ -40,21 +51,49 @@ from repro.kernels import ops
 
 # corruption classes, indexed by FaultPlan.kind
 KINDS = ("nan", "inf", "sign", "blowup")
+# fault-RNG fold ids are POSITIONAL in this tuple (0=dropout, 1=straggler,
+# 2=delay); corrupt folds at 3, kind at 4, lateness at 5.  The delay draw
+# keeps fold id 2 whether it lands in `silent` (engine off) or `delayed`
+# (engine on), so silent|delayed is the same client set either way and the
+# synchronous collapse is bitwise.
 _SILENCE_CLASSES = ("dropout", "straggler", "delay")
 
 
 class FaultPlan(NamedTuple):
     """The round's fault draw over the client population.
 
-    silent:  (m,) bool -- client never returns this round (any silence class)
-    corrupt: (m,) bool -- client transmits a wire-mangled uplink (never both:
-             a client that does not return transmits nothing to corrupt)
-    kind:    (m,) int32 -- corruption class index into ``KINDS``
+    silent:   (m,) bool -- client never returns this round (hard silence)
+    corrupt:  (m,) bool -- client transmits a wire-mangled uplink (disjoint
+              from silent and delayed: a client that does not return this
+              round transmits nothing to corrupt)
+    kind:     (m,) int32 -- corruption class index into ``KINDS``
+    delayed:  (m,) bool -- uplink in flight through the stale buffer
+              (all-False unless ``async_on``; disjoint from silent)
+    lateness: (m,) int32 -- drawn rounds-late of each delayed client
+              (0 on non-delayed rows)
     """
 
     silent: jax.Array
     corrupt: jax.Array
     kind: jax.Array
+    delayed: jax.Array
+    lateness: jax.Array
+
+
+def async_on(cfg: FederatedConfig) -> bool:
+    """Static policy: does this config run the bounded-staleness engine?
+
+    Requires a ``delay`` schedule on the centralised star topology (graph
+    rounds keep the silence contract -- there is no per-edge stale buffer).
+    ``async_rounds="auto"`` engages exactly when the knobs deviate from the
+    synchronous point (``max_staleness > 0`` or a finite ``deadline``);
+    True forces the engine, False keeps delay = silence."""
+    fc = cfg.faults
+    if fc is None or fc.delay <= 0.0 or cfg.topology != "star":
+        return False
+    if cfg.async_rounds == "auto":
+        return cfg.max_staleness > 0 or math.isfinite(cfg.deadline)
+    return bool(cfg.async_rounds)
 
 
 def fault_key(fc: FaultConfig, round_idx) -> jax.Array:
@@ -82,13 +121,35 @@ def plan(cfg: FederatedConfig, round_idx, m: int) -> Optional[FaultPlan]:
         return jax.random.bernoulli(
             jax.random.fold_in(key, cls_id), rate, (m,))
 
+    a_on = async_on(cfg)
     silent = jnp.zeros((m,), bool)
+    delayed = jnp.zeros((m,), bool)
     for cls_id, name in enumerate(_SILENCE_CLASSES):
-        silent = silent | draw(cls_id, getattr(fc, name))
-    corrupt = draw(3, fc.corrupt) & ~silent
+        hit = draw(cls_id, getattr(fc, name))
+        if name == "delay" and a_on:
+            # same fold id whether delay means silence or staleness, so
+            # silent|delayed is the identical client set either way
+            delayed = hit & ~silent
+        else:
+            silent = silent | hit
+    lateness = jnp.zeros((m,), jnp.int32)
+    if a_on:
+        lateness = jax.random.randint(
+            jax.random.fold_in(key, 5), (m,), 1, fc.delay_max + 1, jnp.int32)
+        lateness = jnp.where(delayed, lateness, 0)
+        if math.isfinite(cfg.deadline):
+            # past the deadline -> demoted to the silence contract at plan
+            # time: the uplink never enters the stale buffer
+            late = delayed & (lateness.astype(jnp.float32)
+                              > jnp.float32(cfg.deadline))
+            silent = silent | late
+            delayed = delayed & ~late
+            lateness = jnp.where(delayed, lateness, 0)
+    corrupt = draw(3, fc.corrupt) & ~silent & ~delayed
     kind = jax.random.randint(
         jax.random.fold_in(key, 4), (m,), 0, len(KINDS), jnp.int32)
-    return FaultPlan(silent=silent, corrupt=corrupt, kind=kind)
+    return FaultPlan(silent=silent, corrupt=corrupt, kind=kind,
+                     delayed=delayed, lateness=lateness)
 
 
 def take(plan_: Optional[FaultPlan], idx) -> Optional[FaultPlan]:
@@ -98,7 +159,8 @@ def take(plan_: Optional[FaultPlan], idx) -> Optional[FaultPlan]:
         return None
     idx = jnp.asarray(idx)
     return FaultPlan(silent=plan_.silent[idx], corrupt=plan_.corrupt[idx],
-                     kind=plan_.kind[idx])
+                     kind=plan_.kind[idx], delayed=plan_.delayed[idx],
+                     lateness=plan_.lateness[idx])
 
 
 def inject(fc: Optional[FaultConfig], plan_: Optional[FaultPlan], uplink):
@@ -206,13 +268,14 @@ def combine_mask(mask, plan_: Optional[FaultPlan], keep):
 def fault_metrics(plan_: Optional[FaultPlan], transmitters, keep) -> dict:
     """Round fault counters (f32 scalars, scan-stackable):
 
-    ``faults_injected`` -- clients hit by the schedule this round (silent or
-    corrupt, over the population the plan was drawn for);
+    ``faults_injected`` -- clients hit by the schedule this round (silent,
+    corrupt, or delayed, over the population the plan was drawn for);
     ``faults_demoted`` -- transmitting clients the screen silenced.
     """
     f32 = jnp.float32
     injected = (jnp.zeros((), f32) if plan_ is None
-                else jnp.sum((plan_.silent | plan_.corrupt).astype(f32)))
+                else jnp.sum((plan_.silent | plan_.corrupt
+                              | plan_.delayed).astype(f32)))
     if keep is None:
         demoted = jnp.zeros((), f32)
     else:

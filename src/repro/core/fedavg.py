@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena, faults
+from repro.core import arena, faults, staleness
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, cohort_batch, run_cohort_inner, use_arena, use_cohort,
@@ -130,7 +130,14 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     if faults.screening_on(cfg):
         keep = faults.screen_keep(cfg, uplink, x_s_row)
     mask = faults.combine_mask(pmask, fplan, keep)
-    if mask is not None:
+    sm = {}
+    if faults.async_on(cfg):
+        # bounded-staleness engine: delayed rows buffer, arrivals mix into
+        # the cached server view (u_hat guaranteed: async carries the cache)
+        uplink, mask, stale_up, sm = staleness.step_arena(
+            cfg, fplan, uplink, u_hat, mask, state)
+        new_state |= stale_up
+    elif mask is not None:
         # silent clients transmit nothing; the server keeps its cached view
         uplink = jnp.where(mask[:, None], uplink, u_hat)
     if u_hat is not None:
@@ -146,8 +153,10 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
         "used_arena": jnp.ones((), f32),
     }
     if fplan is not None or keep is not None:
-        metrics |= faults.fault_metrics(
-            fplan, faults.combine_mask(pmask, fplan, None), keep)
+        tx = faults.combine_mask(pmask, fplan, None)
+        if faults.async_on(cfg):
+            tx = staleness.fresh_mask(tx, fplan)
+        metrics |= faults.fault_metrics(fplan, tx, keep) | sm
     return new_state, metrics
 
 
@@ -188,7 +197,13 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     if faults.screening_on(cfg):
         keep = faults.screen_keep_tree(cfg, uplink, x_s)
     mask = faults.combine_mask(pmask, fplan, keep)
-    if mask is not None:
+    sm = {}
+    if faults.async_on(cfg):
+        # bounded-staleness engine: delayed rows buffer, arrivals mix
+        uplink, mask, stale_up, sm = staleness.step_tree(
+            cfg, fplan, uplink, state["u_hat"], mask, state)
+        new_state |= stale_up
+    elif mask is not None:
         uplink = T.tree_select(mask, uplink, state["u_hat"])
     if "u_hat" in state:
         new_state["u_hat"] = uplink  # the server's per-client view
@@ -201,8 +216,10 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
         "used_arena": jnp.zeros((), jnp.float32),
     }
     if fplan is not None or keep is not None:
-        metrics |= faults.fault_metrics(
-            fplan, faults.combine_mask(pmask, fplan, None), keep)
+        tx = faults.combine_mask(pmask, fplan, None)
+        if faults.async_on(cfg):
+            tx = staleness.fresh_mask(tx, fplan)
+        metrics |= faults.fault_metrics(fplan, tx, keep) | sm
     return new_state, metrics
 
 
@@ -212,16 +229,20 @@ def make(cfg: FederatedConfig) -> FedOpt:
                        or faults.needs_cache(cfg))
         if use_arena(cfg, params):
             st = {"x_s": params, "round": jnp.zeros((), jnp.int32)}
+            spec = arena.ArenaSpec.from_tree(params)
             if needs_cache:
-                spec = arena.ArenaSpec.from_tree(params)
                 row = spec.pack(params)
                 # server's cached per-client view: init == the round-0 uplink
                 # from a client that never moved
                 st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
+            if faults.async_on(cfg):
+                st |= staleness.init_arena(spec, m)
             return st
         st = {"x_s": params, "round": jnp.zeros((), jnp.int32)}
         if needs_cache:
             st["u_hat"] = T.tree_broadcast(params, m)
+        if faults.async_on(cfg):
+            st |= staleness.init_tree(params, m)
         return st
 
     return FedOpt(

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena, faults
+from repro.core import arena, faults, staleness
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, affine_case, arena_grad, cohort_batch, resolved_rho,
@@ -150,7 +150,13 @@ def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
     (state_updates, x_s_new_row, lam_s_new, mask, fault_metrics) -- ``mask``
     is the round's effective active mask (None = every uplink entered the
     mean); demoted and faulted clients are SILENT, full stop, so the round
-    is bit-identical to a participation-masked round with the same mask."""
+    is bit-identical to a participation-masked round with the same mask.
+
+    With the bounded-staleness engine on (``faults.async_on``) the select
+    against the cache routes through ``staleness.step_arena`` instead:
+    delayed rows are buffered, arriving stale rows mix into the cache with
+    their discounted weight, and the returned mask additionally excludes
+    delayed clients (their carry keeps, like a silent client's)."""
     rho = resolved_rho(cfg)
     new_state = {}
     u_hat = state.get("u_hat")  # arena-resident (m, width) or absent
@@ -168,7 +174,12 @@ def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
     if faults.screening_on(cfg):
         keep = faults.screen_keep(cfg, uplink, spec.pack(state["x_s"]))
     mask = faults.combine_mask(pmask, fplan, keep)
-    if mask is not None:
+    sm = {}
+    if faults.async_on(cfg):
+        uplink, mask, stale_up, sm = staleness.step_arena(
+            cfg, fplan, uplink, u_hat, mask, state)
+        new_state |= stale_up
+    elif mask is not None:
         uplink = jnp.where(mask[:, None], uplink, u_hat)
     if u_hat is not None:
         new_state["u_hat"] = uplink
@@ -177,8 +188,11 @@ def arena_tail(cfg: FederatedConfig, spec, state, uplink, m):
     lam_s_new = ops.dual_from_uplink(uplink, x_s_new, rho)
     fm = {}
     if fplan is not None or keep is not None:
-        fm = faults.fault_metrics(
-            fplan, faults.combine_mask(pmask, fplan, None), keep)
+        tx = faults.combine_mask(pmask, fplan, None)
+        if faults.async_on(cfg):
+            # delayed clients transmit nothing fresh this round
+            tx = staleness.fresh_mask(tx, fplan)
+        fm = faults.fault_metrics(fplan, tx, keep) | sm
     return new_state, x_s_new, lam_s_new, mask, fm
 
 
@@ -380,7 +394,13 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
     if faults.screening_on(cfg):
         keep = faults.screen_keep_tree(cfg, uplink, x_s)
     mask = faults.combine_mask(pmask, fplan, keep)
-    if mask is not None:
+    sm = {}
+    if faults.async_on(cfg):
+        # bounded-staleness engine: delayed rows buffer, arrivals mix
+        uplink, mask, stale_up, sm = staleness.step_tree(
+            cfg, fplan, uplink, state["u_hat"], mask, state)
+        new_state |= stale_up
+    elif mask is not None:
         # silent clients transmit nothing; the server keeps its cached view
         uplink = T.tree_select(mask, uplink, state["u_hat"])
     if "u_hat" in state:
@@ -405,8 +425,10 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False, 
         "used_arena": jnp.zeros((), jnp.float32),
     }
     if fplan is not None or keep is not None:
-        metrics |= faults.fault_metrics(
-            fplan, faults.combine_mask(pmask, fplan, None), keep)
+        tx = faults.combine_mask(pmask, fplan, None)
+        if faults.async_on(cfg):
+            tx = staleness.fresh_mask(tx, fplan)
+        metrics |= faults.fault_metrics(fplan, tx, keep) | sm
     if return_trace:  # quantities the convergence-theory checks need
         metrics["trace"] = {"x_ref": x_ref, "x_bar": x_bar, "lam_is": lam_is, "x_K": x_K}
     return new_state, metrics
@@ -429,6 +451,8 @@ def make(cfg: FederatedConfig) -> FedOpt:
             if (cfg.uplink_bits is not None or cfg.participation < 1.0
                     or faults.needs_cache(cfg)):
                 st["u_hat"] = jnp.broadcast_to(row[None], (m, spec.width))
+            if faults.async_on(cfg):
+                st |= staleness.init_arena(spec, m)
             return st
         st = {
             "x_s": params,
@@ -443,6 +467,8 @@ def make(cfg: FederatedConfig) -> FedOpt:
             # uplink x_c - 0/rho.  A fresh broadcast, NOT an alias of x_c:
             # donated round states must not contain the same buffer twice.
             st["u_hat"] = T.tree_broadcast(params, m)
+        if faults.async_on(cfg):
+            st |= staleness.init_tree(params, m)
         return st
 
     return FedOpt(

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederatedConfig
-from repro.core import arena, faults
+from repro.core import arena, faults, staleness
 from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, affine_case, arena_grad, cohort_batch, run_cohort_inner,
@@ -204,7 +204,18 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     if faults.screening_on(cfg):
         keep = faults.screen_keep(cfg, x_t, x_s_row)
     mask = faults.combine_mask(pmask, fplan, keep)
-    if mask is not None:
+    sm = {}
+    stale_up = {}
+    if faults.async_on(cfg):
+        # bounded-staleness engine: the fresh-select baseline is the
+        # zero-delta server row; a buffered x_t lands s rounds later and
+        # mixes toward it with weight gamma**s.  The control variate
+        # refreshes on FRESH participation only -- an arriving stale row
+        # carries no variate update
+        x_up, mask, stale_up, sm = staleness.step_arena(
+            cfg, fplan, x_t, x_s_row, mask, state)
+        c_i_new = jnp.where(mask[:, None], c_i_new, c_i)
+    elif mask is not None:
         # silent/demoted clients transmit nothing: zero delta on both server
         # means, control variate kept
         c_i_new = jnp.where(mask[:, None], c_i_new, c_i)
@@ -218,6 +229,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
         "c": spec.unpack(c_new),
         "c_i": c_i_new,
         "round": state["round"] + 1,
+        **stale_up,
     }
     f32 = jnp.float32
     metrics = {
@@ -232,8 +244,10 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
         "used_arena": jnp.ones((), f32),
     }
     if fplan is not None or keep is not None:
-        metrics |= faults.fault_metrics(
-            fplan, faults.combine_mask(pmask, fplan, None), keep)
+        tx = faults.combine_mask(pmask, fplan, None)
+        if faults.async_on(cfg):
+            tx = staleness.fresh_mask(tx, fplan)
+        metrics |= faults.fault_metrics(fplan, tx, keep) | sm
     return new_state, metrics
 
 
@@ -277,7 +291,15 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     if faults.screening_on(cfg):
         keep = faults.screen_keep_tree(cfg, x_t, x_s)
     mask = faults.combine_mask(pmask, fplan, keep)
-    if mask is not None:
+    sm = {}
+    stale_up = {}
+    if faults.async_on(cfg):
+        # same stale-dual contract as the arena path: x_s_b is the
+        # zero-delta baseline, c_i refreshes on fresh participation only
+        x_up, mask, stale_up, sm = staleness.step_tree(
+            cfg, fplan, x_t, x_s_b, mask, state)
+        c_i_new = T.tree_select(mask, c_i_new, c_i)
+    elif mask is not None:
         # silent/demoted clients transmit nothing (zero delta, c_i kept) --
         # same contract as the arena path
         c_i_new = T.tree_select(mask, c_i_new, c_i)
@@ -293,6 +315,7 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
         "c": c_new,
         "c_i": c_i_new,
         "round": state["round"] + 1,
+        **stale_up,
     }
     metrics = {
         # invariant: sum_i (c_i - c) = 0 given zero init
@@ -303,8 +326,10 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
         "used_arena": jnp.zeros((), jnp.float32),
     }
     if fplan is not None or keep is not None:
-        metrics |= faults.fault_metrics(
-            fplan, faults.combine_mask(pmask, fplan, None), keep)
+        tx = faults.combine_mask(pmask, fplan, None)
+        if faults.async_on(cfg):
+            tx = staleness.fresh_mask(tx, fplan)
+        metrics |= faults.fault_metrics(fplan, tx, keep) | sm
     return new_state, metrics
 
 
@@ -329,18 +354,24 @@ def make(cfg: FederatedConfig) -> FedOpt:
             # in place round over round; x_s and c stay pytrees (the public
             # server-params / server-variate contract, p_shard in launchers)
             spec = arena.ArenaSpec.from_tree(params)
-            return {
+            st = {
                 "x_s": params,
                 "c": T.tree_zeros_like(params),
                 "c_i": arena.zeros(spec, m),
                 "round": jnp.zeros((), jnp.int32),
             }
-        return {
+            if faults.async_on(cfg):
+                st |= staleness.init_arena(spec, m)
+            return st
+        st = {
             "x_s": params,
             "c": T.tree_zeros_like(params),
             "c_i": T.tree_zeros_like(T.tree_broadcast(params, m)),
             "round": jnp.zeros((), jnp.int32),
         }
+        if faults.async_on(cfg):
+            st |= staleness.init_tree(params, m)
+        return st
 
     return FedOpt(
         name="scaffold",

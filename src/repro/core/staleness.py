@@ -1,0 +1,158 @@
+"""Bounded-staleness async round engine (ISSUE 7): real semantics for the
+``delay`` fault class.
+
+PR 6 mapped every delayed uplink onto total silence -- the finished work
+was thrown away.  Stochastic/asynchronous PDMM converges under stale
+updates with randomly inactive nodes (Sherson et al., arXiv:1706.02654;
+Zhang & Heusdens, arXiv:1702.00841), so this module keeps the delayed
+client's uplink IN FLIGHT instead: stored into a stale-buffer arena the
+round it was produced, delivered ``s`` rounds later, and admitted into the
+server mean with a staleness-discounted weight.
+
+State (one in-flight slot per client, rides inside the federated state so
+it checkpoints/donates/resumes with everything else):
+
+    stale_buf  (m, width) | stacked pytree -- the buffered uplink rows
+    stale_age  (m,) int32 -- rounds the slot has been in flight; -1 = empty
+    stale_lat  (m,) int32 -- the slot's drawn lateness; 0 = empty
+
+Per-round schedule (pure integer bookkeeping, identical on the arena and
+pytree paths):
+
+    occ      = age >= 0                    slot holds an in-flight row
+    age'     = occ ? age + 1 : age         one more round in flight
+    arriving = occ & (age' >= lat)         the row lands THIS round
+    admit    = arriving & (lat <= max_staleness)
+    w        = admit ? stale_gamma**lat : 0
+    store    = delayed & (~occ | arriving) one slot: busy means the new
+                                           delayed uplink is dropped (the
+                                           client degrades to silence)
+
+A row sent at round r with lateness 1 therefore arrives at round r + 1
+with weight ``stale_gamma**1``.  Deadline demotion happens earlier, at
+plan time (``core.faults.plan``): a drawn lateness past ``deadline`` never
+reaches this module.  The delayed client's LOCAL state (primal carry,
+control variate) keeps the silence contract -- only the uplink travels
+late -- so the round tails exclude delayed rows from the fresh mask and the
+arriving row mixes into the server's cached view on landing.
+
+Synchronous collapse: with ``max_staleness=0`` no arrival is ever admitted
+(lateness >= 1), every mixed row IS the masked select (``ops.stale_mix``
+guards ``w > 0`` bitwise), and delayed clients are excluded from the fresh
+mask exactly as the silence contract excludes them -- the async round is
+bit-identical to today's synchronous masked round (tests/test_staleness.py
+pins this for all four algorithms on both layouts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+from repro.core import arena as arena_mod
+from repro.core import tree_util as T
+from repro.core.faults import FaultPlan, async_on  # noqa: F401  (re-export)
+from repro.kernels import ops
+
+# state keys this engine owns (compared-ignored by the collapse tests,
+# merged into every algorithm's init when async_on)
+STATE_KEYS = ("stale_buf", "stale_age", "stale_lat")
+
+
+def init_arena(spec, m: int) -> dict:
+    """Fresh stale-slot state for the packed arena layout."""
+    return {
+        "stale_buf": arena_mod.zeros(spec, m),
+        "stale_age": jnp.full((m,), -1, jnp.int32),
+        "stale_lat": jnp.zeros((m,), jnp.int32),
+    }
+
+
+def init_tree(params, m: int) -> dict:
+    """Fresh stale-slot state for the per-leaf pytree layout."""
+    return {
+        "stale_buf": T.tree_zeros_like(T.tree_broadcast(params, m)),
+        "stale_age": jnp.full((m,), -1, jnp.int32),
+        "stale_lat": jnp.zeros((m,), jnp.int32),
+    }
+
+
+def _schedule(cfg: FederatedConfig, fplan: FaultPlan, age, lat):
+    """The round's slot bookkeeping; see the module docstring for the
+    algebra.  Returns (store, w, arriving, admit, age_new, lat_new)."""
+    occ = age >= 0
+    age_t = jnp.where(occ, age + 1, age)
+    arriving = occ & (age_t >= lat)
+    admit = arriving & (lat <= cfg.max_staleness)
+    w = jnp.where(
+        admit,
+        jnp.float32(cfg.stale_gamma) ** lat.astype(jnp.float32),
+        jnp.float32(0.0))
+    free = ~occ | arriving
+    store = fplan.delayed & free
+    age_new = jnp.where(store, 0, jnp.where(arriving, -1, age_t))
+    lat_new = jnp.where(store, fplan.lateness, jnp.where(arriving, 0, lat))
+    return store, w, arriving, admit, age_new, lat_new
+
+
+def fresh_mask(mask, fplan: FaultPlan):
+    """The round's FRESH-uplink mask: the combined participation/fault/
+    screen mask with delayed clients excluded (their uplink is in flight,
+    not in this round's mean)."""
+    alive = ~fplan.delayed
+    return alive if mask is None else mask & alive
+
+
+def stale_metrics(store, arriving, admit) -> dict:
+    """Stale-slot counters (f32 scalars, scan-stackable)."""
+    f32 = jnp.float32
+    return {
+        "stale_buffered": jnp.sum(store.astype(f32)),
+        "stale_admitted": jnp.sum(admit.astype(f32)),
+        "stale_dropped": jnp.sum((arriving & ~admit).astype(f32)),
+    }
+
+
+def step_arena(cfg: FederatedConfig, fplan: FaultPlan, uplink, cache, mask,
+               state):
+    """One async round step over the packed arena.
+
+    ``uplink``: the (m, width) transmitted rows (post EF21/injection);
+    ``cache``: the (m, width) u_hat cache or the (width,) server baseline
+    row (SCAFFOLD/zero-delta); ``mask``: the combined silence/screen mask.
+    Returns ``(mixed, fresh, state_updates, metrics)`` -- ``mixed`` is what
+    enters the server mean AND the new cache, ``fresh`` the effective
+    active mask the callers use for their carry selects and drift metrics.
+    The mix reads the OLD buffer, so a row arriving this round and a new
+    store into the same slot compose in one pass (``ops.stale_mix``)."""
+    age, lat, buf = state["stale_age"], state["stale_lat"], state["stale_buf"]
+    store, w, arriving, admit, age_new, lat_new = _schedule(cfg, fplan, age, lat)
+    fresh = fresh_mask(mask, fplan)
+    mixed, buf_new = ops.stale_mix(uplink, cache, buf, fresh, store, w)
+    updates = {"stale_buf": buf_new, "stale_age": age_new,
+               "stale_lat": lat_new}
+    return mixed, fresh, updates, stale_metrics(store, arriving, admit)
+
+
+def step_tree(cfg: FederatedConfig, fplan: FaultPlan, uplink, cache, mask,
+              state):
+    """``step_arena`` over stacked client pytrees (leading dim m on every
+    leaf); the schedule is shared, the mix runs per leaf with the same
+    f32-and-guard arithmetic as ``ops.stale_mix``'s xla path."""
+    age, lat, buf = state["stale_age"], state["stale_lat"], state["stale_buf"]
+    store, w, arriving, admit, age_new, lat_new = _schedule(cfg, fplan, age, lat)
+    fresh = fresh_mask(mask, fplan)
+    base = T.tree_select(fresh, uplink, cache)
+
+    def mix_leaf(b, s):
+        shape = (-1,) + (1,) * (b.ndim - 1)
+        wk = w.reshape(shape)
+        bf = b.astype(jnp.float32)
+        mixf = bf + wk * (s.astype(jnp.float32) - bf)
+        return jnp.where(wk > 0, mixf.astype(b.dtype), b)
+
+    mixed = T.tmap(mix_leaf, base, buf)
+    buf_new = T.tree_select(store, uplink, buf)
+    updates = {"stale_buf": buf_new, "stale_age": age_new,
+               "stale_lat": lat_new}
+    return mixed, fresh, updates, stale_metrics(store, arriving, admit)

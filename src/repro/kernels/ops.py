@@ -434,6 +434,39 @@ def screen_uplink(u, ref, *, impl: Optional[str] = None,
         u, ref, block=block, interpret=(impl == "pallas_interpret"))
 
 
+def stale_mix(uplink, cache, buf, fresh, store, w, *, impl: Optional[str] = None,
+              block: Optional[int] = None):
+    """Fused stale-uplink admission mix (bounded-staleness engine, ISSUE 7):
+    ONE pass over the uplink + stale-buffer arenas emitting the round's
+    mixed contribution rows and the updated stale buffer.
+
+        base_i  = uplink_i if fresh_i else cache_i      (today's masked select)
+        mixed_i = base_i + w_i (buf_i - base_i) if w_i > 0 else base_i
+        buf'_i  = uplink_i if store_i else buf_i
+
+    ``cache``: (width,) broadcast server row or (m, width) per-client cache.
+    The ``w_i > 0`` guard keeps the w = 0 rows BITWISE equal to the plain
+    select (no -0.0 flips, no 0 * non-finite NaNs), which is what collapses
+    ``max_staleness=0`` to the synchronous masked round exactly.  The mix
+    arithmetic runs in f32 and casts back, matching the pallas kernel.
+    Returns ``(mixed, buf_new)``.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        cache2 = cache if cache.ndim == 2 else cache[None]
+        base = jnp.where(fresh[:, None], uplink, cache2)
+        bf = base.astype(jnp.float32)
+        mixf = bf + w[:, None].astype(jnp.float32) * (buf.astype(jnp.float32) - bf)
+        mixed = jnp.where((w > 0)[:, None], mixf.astype(base.dtype), base)
+        buf_new = jnp.where(store[:, None], uplink, buf)
+        return mixed, buf_new
+    from repro.kernels import stale_mix as sm
+
+    return sm.stale_mix_pallas(
+        uplink, cache, buf, fresh, store, w, block=block,
+        interpret=(impl == "pallas_interpret"))
+
+
 def _ef21_row_scales(rowmax, leaf_rows, lo: float):
     """Expand per-(client, leaf) maxima to per-128-lane-row scales.  The
     arena pads each leaf to a 128-lane multiple, so leaf boundaries fall on

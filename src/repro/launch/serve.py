@@ -2,6 +2,19 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --batch 4 --prompt-len 64 --new-tokens 16
+
+Train-while-serve (ISSUE 7): ``--ckpt-dir <dir> --watch`` turns the launcher
+into a hot-swap server.  A ``HotSwapWatcher`` polls the trainer's keep-N
+checkpoint anchors between query batches, loads new steps with
+retry/exponential-backoff (``load_with_retry``), REJECTS truncated or
+corrupt files loudly (the step is remembered as bad and never retried), and
+keeps serving the last-good parameters when the newest anchor is unreadable
+-- the server degrades, it never crashes or serves garbage.  The model is
+built and the prefill/decode functions jitted ONCE; a swap only repoints the
+parameter pytree, so steady-state query latency is unchanged.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+        --ckpt-dir /tmp/fedckpt --watch --duration 20
 """
 from __future__ import annotations
 
@@ -11,8 +24,74 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import checkpoint as ckpt
 from repro.configs import get_arch
 from repro.models import build as build_model
+
+
+def load_with_retry(ckpt_dir: str, step: int, *, retries: int = 3,
+                    backoff: float = 0.05, factor: float = 2.0):
+    """``checkpoint.load`` with exponential backoff.  Saves are atomic
+    (tmp+fsync+rename), so a transient failure here is a filesystem race --
+    e.g. the trainer's keep-N pruning unlinking the step between listing and
+    reading -- not a half-written file; a PERSISTENT failure is a genuinely
+    truncated/corrupt file and propagates to the caller after ``retries``
+    attempts."""
+    delay = backoff
+    for attempt in range(retries):
+        try:
+            return ckpt.load(ckpt_dir, step)
+        except (FileNotFoundError, ValueError, OSError):
+            if attempt == retries - 1:
+                raise
+            time.sleep(delay)
+            delay *= factor
+    raise AssertionError("unreachable")
+
+
+class HotSwapWatcher:
+    """Tracks the newest LOADABLE checkpoint under ``ckpt_dir``.
+
+    ``poll()`` walks the on-disk steps newest-first (``checkpoint.steps``,
+    not ``latest_step``: a bad file at the newest step must not pin the
+    watcher forever), skips steps already rejected, and returns the payload
+    of the first new step that loads -- or ``None`` when there is nothing
+    newer than the step currently served.  A step whose load still fails
+    after the retry/backoff schedule is rejected LOUDLY and remembered in
+    ``self.bad``; the caller keeps serving the last-good parameters."""
+
+    def __init__(self, ckpt_dir: str, *, retries: int = 3,
+                 backoff: float = 0.05, factor: float = 2.0):
+        self.ckpt_dir = ckpt_dir
+        self.retries, self.backoff, self.factor = retries, backoff, factor
+        self.step: int | None = None  # currently served step
+        self.payload = None
+        self.bad: set[int] = set()
+        self.swaps = 0
+        self.failures = 0
+
+    def poll(self):
+        cur = -1 if self.step is None else self.step
+        for step in sorted(ckpt.steps(self.ckpt_dir), reverse=True):
+            if step <= cur:
+                break  # nothing newer than what we serve
+            if step in self.bad:
+                continue  # already rejected; try the next-newest
+            try:
+                payload = load_with_retry(
+                    self.ckpt_dir, step, retries=self.retries,
+                    backoff=self.backoff, factor=self.factor)
+            except (FileNotFoundError, ValueError, OSError) as e:
+                self.bad.add(step)
+                self.failures += 1
+                print(f"[serve] REJECTED checkpoint step {step}: {e}",
+                      flush=True)
+                continue
+            self.step = step
+            self.payload = payload
+            self.swaps += 1
+            return payload
+        return None
 
 
 def run(arch: str, *, reduced: bool = True, batch: int = 4, prompt_len: int = 64,
@@ -63,6 +142,96 @@ def run(arch: str, *, reduced: bool = True, batch: int = 4, prompt_len: int = 64
     return gen
 
 
+def run_watch(arch: str, *, ckpt_dir: str, reduced: bool = True,
+              batch: int = 2, prompt_len: int = 16, new_tokens: int = 4,
+              seed: int = 0, poll_interval: float = 0.25,
+              duration: float = 30.0, wait_first: float = 60.0,
+              stop_when=None, retries: int = 3, backoff: float = 0.05,
+              history: list | None = None):
+    """Serve queries continuously while a trainer writes checkpoints.
+
+    Blocks until the FIRST loadable checkpoint appears (``wait_first``
+    seconds, then ``TimeoutError``), then alternates poll -> swap-if-newer ->
+    serve one greedy query batch until ``duration`` elapses or ``stop_when``
+    (an optional zero-arg callable, e.g. "the trainer exited and we served
+    its final step") returns True.  Returns the per-query history rows
+    ``{"t", "step", "round", "tokens"}`` plus the watcher (swap/failure
+    counters) for callers that assert on the trajectory; pass ``history``
+    (a caller-owned list, appended in place) to watch progress from another
+    thread while the loop runs."""
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    key = jax.random.key(seed)
+
+    watcher = HotSwapWatcher(ckpt_dir, retries=retries, backoff=backoff)
+    t_first = time.time()
+    payload = watcher.poll()
+    while payload is None:
+        if time.time() - t_first > wait_first:
+            raise TimeoutError(
+                f"no loadable checkpoint appeared under {ckpt_dir} within "
+                f"{wait_first:.0f}s")
+        time.sleep(poll_interval)
+        payload = watcher.poll()
+    params = payload["server"]
+    print(f"[serve] serving step {watcher.step} "
+          f"(round {int(payload['round'])}) from {ckpt_dir}", flush=True)
+
+    if cfg.n_codebooks > 1:
+        prompts = jax.random.randint(
+            key, (batch, cfg.n_codebooks, prompt_len), 0, cfg.vocab_size)
+    else:
+        prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    b = {"tokens": prompts}
+    if cfg.frontend == "vision":
+        b["patches"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (batch, cfg.n_prefix_tokens, cfg.frontend_dim))
+
+    # jit ONCE; hot swaps only repoint the parameter pytree
+    prefill = jax.jit(lambda p, bb: model.prefill(
+        p, bb, prompt_len + new_tokens + cfg.n_prefix_tokens))
+    decode = jax.jit(model.decode)
+
+    def pick(lg):
+        if cfg.n_codebooks > 1:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, :, None]
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+
+    def query(p):
+        logits, cache = prefill(p, b)
+        n = 0
+        for _ in range(new_tokens):
+            nxt = pick(logits)
+            logits, cache = decode(p, cache, nxt)
+            n += int(nxt.size)
+        jax.block_until_ready(logits)
+        return n
+
+    history = [] if history is None else history
+    t_end = time.time() + duration
+    while True:
+        fresh = watcher.poll()
+        if fresh is not None:
+            payload, params = fresh, fresh["server"]
+            print(f"[serve] hot-swapped to step {watcher.step} "
+                  f"(round {int(payload['round'])})", flush=True)
+        n_tok = query(params)
+        history.append({"t": time.time(), "step": watcher.step,
+                        "round": int(payload["round"]), "tokens": n_tok})
+        if stop_when is not None and stop_when():
+            break
+        if time.time() >= t_end:
+            break
+        time.sleep(poll_interval)
+    served = sorted({row["step"] for row in history})
+    print(f"[serve] {len(history)} query batches; served steps {served}; "
+          f"swaps={watcher.swaps} rejected={watcher.failures}", flush=True)
+    return history, watcher
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -73,9 +242,28 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="with --watch: hot-swap serve the trainer's anchors")
+    ap.add_argument("--watch", action="store_true",
+                    help="train-while-serve: poll --ckpt-dir for new "
+                         "checkpoints between query batches")
+    ap.add_argument("--poll-interval", type=float, default=0.25)
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="watch mode: serve for this many seconds")
+    ap.add_argument("--wait-first", type=float, default=60.0,
+                    help="watch mode: seconds to wait for the first anchor")
     args = ap.parse_args()
-    run(args.arch, reduced=args.reduced, batch=args.batch,
-        prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+    if args.watch:
+        if not args.ckpt_dir:
+            raise SystemExit("--watch needs --ckpt-dir")
+        run_watch(args.arch, ckpt_dir=args.ckpt_dir, reduced=args.reduced,
+                  batch=args.batch, prompt_len=args.prompt_len,
+                  new_tokens=args.new_tokens,
+                  poll_interval=args.poll_interval, duration=args.duration,
+                  wait_first=args.wait_first)
+    else:
+        run(args.arch, reduced=args.reduced, batch=args.batch,
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens)
 
 
 if __name__ == "__main__":

@@ -72,6 +72,10 @@ def run(
     rounds_per_call: int = 1,
     faults: str | FaultConfig | None = None,
     screen: bool | str = "auto",
+    deadline: float = math.inf,
+    max_staleness: int = 0,
+    stale_gamma: float = 0.5,
+    async_rounds: bool | str = "auto",
     watchdog: bool = False,
     watchdog_factor: float = 10.0,
     watchdog_patience: int = 2,
@@ -96,7 +100,9 @@ def run(
             cfg.fed, algorithm=algorithm, inner_steps=k, eta=eta * scale,
             num_clients=m, layout="client_axis", uplink_bits=uplink_bits,
             participation=participation, rounds_per_call=rounds_per_call,
-            faults=fault_cfg, screen=screen,
+            faults=fault_cfg, screen=screen, async_rounds=async_rounds,
+            deadline=deadline, max_staleness=max_staleness,
+            stale_gamma=stale_gamma,
         )
 
     cfg = dataclasses.replace(cfg, fed=fed_cfg(1.0))
@@ -120,6 +126,30 @@ def run(
         # written before this launcher grew fault support still resume
         run_config["faults"] = dataclasses.asdict(fault_cfg)
         run_config["screen"] = screen if isinstance(screen, str) else bool(screen)
+        from repro.core import faults as faults_mod
+
+        if faults_mod.async_on(cfg.fed):
+            # the staleness knobs reshape the trajectory (admission weights,
+            # deadline demotions), so they join the fingerprint -- but only
+            # when the async engine is actually on, so pre-ISSUE-7
+            # checkpoints (and delay-as-silence runs) still resume
+            run_config["deadline"] = deadline
+            run_config["max_staleness"] = max_staleness
+            run_config["stale_gamma"] = stale_gamma
+
+    def load_latest_good(what: str):
+        """Newest LOADABLE checkpoint under ckpt_dir: a truncated or corrupt
+        file at the newest step (a crash mid-copy, a bad disk) is skipped
+        with a loud warning instead of killing the run -- resume and
+        watchdog rollback both degrade to the last good anchor."""
+        for step_n in sorted(ckpt.steps(ckpt_dir), reverse=True):
+            try:
+                return step_n, ckpt.load(ckpt_dir, step_n)
+            except ValueError as e:
+                print(f"[train] {what}: SKIPPING unreadable checkpoint step "
+                      f"{step_n}: {e}", flush=True)
+        raise FileNotFoundError(
+            f"{what}: no loadable checkpoint under {ckpt_dir}")
 
     start = 0
     eta_scale = 1.0
@@ -127,10 +157,7 @@ def run(
     if resume:
         if not ckpt_dir:
             raise ValueError("--resume needs --ckpt-dir")
-        last = ckpt.latest_step(ckpt_dir)
-        if last is None:
-            raise FileNotFoundError(f"--resume: no checkpoints under {ckpt_dir}")
-        payload = ckpt.load(ckpt_dir, last)
+        last, payload = load_latest_good("--resume")
         if "fed_state" not in payload:
             raise ValueError(
                 f"checkpoint step {last} under {ckpt_dir} has no 'fed_state' "
@@ -354,8 +381,7 @@ def run(
                 f"divergence watchdog: {rollbacks} rollbacks exceeded "
                 f"max_rollbacks={max_rollbacks} (eta_scale={eta_scale:g}); "
                 f"the run does not converge at any tried stepsize")
-        anchor = ckpt.latest_step(ckpt_dir)
-        payload = ckpt.load(ckpt_dir, anchor)
+        _anchor, payload = load_latest_good("watchdog rollback")
         state = payload["fed_state"]
         start = int(payload["round"])
         eta_scale *= eta_backoff
@@ -429,6 +455,18 @@ def main():
                          "(seed, round, client), so the trace replays exactly")
     ap.add_argument("--screen", default="auto", choices=["auto", "on", "off"],
                     help="fused uplink screening (auto = on iff faults active)")
+    ap.add_argument("--deadline", type=float, default=math.inf,
+                    help="straggler deadline in rounds: a drawn lateness past "
+                         "it demotes the client to silence for the round")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="admit stale uplinks up to this age (0 = the "
+                         "synchronous point: delayed uplinks never land)")
+    ap.add_argument("--stale-gamma", type=float, default=0.5,
+                    help="admission weight gamma**age for arriving stale rows")
+    ap.add_argument("--async", dest="async_rounds", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="bounded-staleness round engine (auto = on iff the "
+                         "staleness knobs deviate from the synchronous point)")
     ap.add_argument("--watchdog", action="store_true",
                     help="divergence watchdog: roll back to the newest healthy "
                          "checkpoint with eta backoff (needs --ckpt-dir)")
@@ -457,6 +495,9 @@ def main():
         rounds_per_call=args.rounds_per_call, log_every=args.log_every,
         faults=args.faults,
         screen={"auto": "auto", "on": True, "off": False}[args.screen],
+        deadline=args.deadline, max_staleness=args.max_staleness,
+        stale_gamma=args.stale_gamma,
+        async_rounds={"auto": "auto", "on": True, "off": False}[args.async_rounds],
         watchdog=args.watchdog, watchdog_factor=args.watchdog_factor,
         watchdog_patience=args.watchdog_patience, eta_backoff=args.eta_backoff,
         max_rollbacks=args.max_rollbacks, ckpt_every=args.ckpt_every,

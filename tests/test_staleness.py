@@ -1,0 +1,471 @@
+"""ISSUE 7: bounded-staleness async rounds -- straggler deadlines, the fused
+stale-uplink admission kernel, and the hot-swap serving path.
+
+The load-bearing invariant: at the synchronous point (``max_staleness=0``,
+``deadline=inf``) the async engine is BIT-IDENTICAL to the delay-as-silence
+masked round, for all four centralised algorithms on both layouts.  The
+chain is structural -- the delay draw keeps fold id 2 whether it lands in
+``silent`` or ``delayed`` (so the excluded client set is identical), the
+``w > 0`` guard in ``ops.stale_mix`` returns the masked select bitwise when
+nothing is admitted, and the fresh mask excludes delayed rows exactly as
+the silence contract does -- and the tests pin every link: the plan
+invariants, the schedule algebra on hand-built slots, the kernel parity,
+the whole-round collapse, the deadline demotion, and bitwise --resume
+replay of a stale trace through the training launcher.
+
+Also here: the hot-swap serving satellites -- ``checkpoint.steps``,
+``load_with_retry`` backoff, and the ``HotSwapWatcher``'s loud rejection of
+truncated anchors with degradation to the last good step.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs.base import FaultConfig, FederatedConfig
+from repro.core import api, faults, make, quadratic, staleness
+from repro.kernels import ops
+
+ALGOS = ["gpdmm", "agpdmm", "scaffold", "fedavg"]
+M = 8
+D = 24
+STALE_KEYS = set(staleness.STATE_KEYS)
+
+
+def _params():
+    return {"w": 0.7 * jnp.ones((D,), jnp.float32)}
+
+
+def _grad(p, b):
+    return jax.tree.map(lambda x: 0.1 * x, p)
+
+
+def _batch(m=M):
+    return {"d": jnp.zeros((m, 1), jnp.float32)}
+
+
+def _run(cfg, rounds, m=M):
+    fed = make(cfg)
+    s = fed.init(_params(), m)
+    rows = []
+    for _ in range(rounds):
+        s, mx = fed.round(s, _grad, _batch(m))
+        rows.append(mx)
+    return s, rows
+
+
+def _assert_trees_equal(a, b, ignore=()):
+    a = {k: v for k, v in a.items() if k not in ignore}
+    b = {k: v for k, v in b.items() if k not in ignore}
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def _cfg(algo="gpdmm", *, delay=0.4, seed=3, **kw):
+    return FederatedConfig(algorithm=algo, inner_steps=2, eta=0.02,
+                           faults=FaultConfig(delay=delay, seed=seed), **kw)
+
+
+# ---------------------------------------------------------------------------
+# config surface + async_on policy
+# ---------------------------------------------------------------------------
+
+def test_fault_config_parse_back_compatible():
+    # pinned pre-ISSUE-7 string still parses; delay_max joins as an int knob
+    fc = FaultConfig.parse("dropout=0.1,corrupt=0.05,seed=7")
+    assert fc.dropout == 0.1 and fc.corrupt == 0.05 and fc.seed == 7
+    fc = FaultConfig.parse("delay=0.3,delay_max=6,seed=2")
+    assert fc.delay == 0.3 and fc.delay_max == 6 and isinstance(fc.delay_max, int)
+    with pytest.raises(ValueError):
+        FaultConfig(delay=0.1, delay_max=0)
+
+
+def test_staleness_knobs_validated():
+    with pytest.raises(ValueError, match="deadline"):
+        _cfg(deadline=0.0)
+    with pytest.raises(ValueError, match="max_staleness"):
+        _cfg(max_staleness=-1)
+    with pytest.raises(ValueError, match="stale_gamma"):
+        _cfg(stale_gamma=0.0)
+    with pytest.raises(ValueError, match="async_rounds"):
+        _cfg(async_rounds="maybe")
+
+
+def test_async_on_policy():
+    # auto: off at the synchronous point, on when a knob deviates
+    assert not faults.async_on(_cfg())
+    assert faults.async_on(_cfg(max_staleness=2))
+    assert faults.async_on(_cfg(deadline=3.0))
+    # forced on/off override auto
+    assert faults.async_on(_cfg(async_rounds=True))
+    assert not faults.async_on(_cfg(async_rounds=False, max_staleness=2))
+    # no delay schedule, or a graph topology -> never on
+    assert not faults.async_on(FederatedConfig(
+        algorithm="gpdmm", inner_steps=1, eta=0.1, async_rounds=True,
+        faults=FaultConfig(dropout=0.3)))
+    assert not faults.async_on(_cfg(async_rounds=True, topology="ring",
+                                    use_arena=True))
+
+
+def test_async_pins_masked_population_path():
+    # the cohort engine cannot age/arrive slots for out-of-cohort clients
+    cfg = _cfg(max_staleness=2, participation=0.5, num_clients=M, cohort=True)
+    assert not api.use_cohort(cfg, M)
+    cfg_sync = _cfg(participation=0.5, num_clients=M, cohort=True)
+    assert api.use_cohort(cfg_sync, M)
+
+
+# ---------------------------------------------------------------------------
+# the plan: delayed is a soft class, same excluded set either way
+# ---------------------------------------------------------------------------
+
+def test_plan_delay_soft_class_invariants():
+    cfg = _cfg(delay=0.5, max_staleness=2)
+    cfg_off = _cfg(delay=0.5, async_rounds=False)
+    for r in range(6):
+        p = faults.plan(cfg, r, 16)
+        p_off = faults.plan(cfg_off, r, 16)
+        d, s, lat = (np.asarray(p.delayed), np.asarray(p.silent),
+                     np.asarray(p.lateness))
+        # disjoint from silence and corruption
+        assert not (d & s).any()
+        assert not (d & np.asarray(p.corrupt)).any()
+        # lateness in [1, delay_max] exactly on delayed rows
+        assert (lat[d] >= 1).all() and (lat[d] <= cfg.faults.delay_max).all()
+        assert (lat[~d] == 0).all()
+        # SAME excluded client set as the delay-as-silence draw (fold id 2
+        # is shared): this is what makes the synchronous collapse bitwise
+        np.testing.assert_array_equal(d | s, np.asarray(p_off.silent))
+        np.testing.assert_array_equal(np.asarray(p_off.delayed),
+                                      np.zeros(16, bool))
+
+
+def test_plan_deadline_demotes_late_stragglers():
+    # deadline below every possible lateness -> all delayed rows demote to
+    # silence at plan time; the plan equals the async-off plan exactly
+    cfg = _cfg(delay=0.6, max_staleness=3, deadline=0.5)
+    cfg_off = _cfg(delay=0.6, async_rounds=False)
+    for r in range(4):
+        p = faults.plan(cfg, r, 16)
+        p_off = faults.plan(cfg_off, r, 16)
+        assert not np.asarray(p.delayed).any()
+        assert (np.asarray(p.lateness) == 0).all()
+        np.testing.assert_array_equal(np.asarray(p.silent),
+                                      np.asarray(p_off.silent))
+    # a mid-range deadline keeps exactly the lateness <= deadline rows
+    cfg_mid = FederatedConfig(
+        algorithm="gpdmm", inner_steps=2, eta=0.02, deadline=2.0,
+        max_staleness=3, faults=FaultConfig(delay=0.6, delay_max=4, seed=3))
+    cfg_inf = FederatedConfig(
+        algorithm="gpdmm", inner_steps=2, eta=0.02, max_staleness=3,
+        faults=FaultConfig(delay=0.6, delay_max=4, seed=3))
+    saw_demotion = False
+    for r in range(8):
+        p_mid = faults.plan(cfg_mid, r, 16)
+        p_inf = faults.plan(cfg_inf, r, 16)
+        lat = np.asarray(p_inf.lateness)
+        late = np.asarray(p_inf.delayed) & (lat > 2.0)
+        saw_demotion |= late.any()
+        np.testing.assert_array_equal(
+            np.asarray(p_mid.delayed), np.asarray(p_inf.delayed) & ~late)
+        np.testing.assert_array_equal(
+            np.asarray(p_mid.silent), np.asarray(p_inf.silent) | late)
+    assert saw_demotion  # the sweep actually exercised a demotion
+
+
+# ---------------------------------------------------------------------------
+# the schedule algebra on hand-built slots
+# ---------------------------------------------------------------------------
+
+def _hand_plan(delayed, lateness):
+    m = len(delayed)
+    z = jnp.zeros((m,), bool)
+    return faults.FaultPlan(
+        silent=z, corrupt=z, kind=jnp.zeros((m,), jnp.int32),
+        delayed=jnp.asarray(delayed, bool),
+        lateness=jnp.asarray(lateness, jnp.int32))
+
+
+def test_schedule_hand_computed():
+    cfg = _cfg(max_staleness=2, stale_gamma=0.5)
+    # slots: [empty, in-flight age0/lat1, in-flight age0/lat2,
+    #         in-flight age1/lat2, empty+new delayed, busy+new delayed]
+    age = jnp.asarray([-1, 0, 0, 1, -1, 0], jnp.int32)
+    lat = jnp.asarray([0, 1, 2, 2, 0, 3], jnp.int32)
+    fplan = _hand_plan([False, False, False, False, True, True],
+                       [0, 0, 0, 0, 2, 1])
+    store, w, arriving, admit, age_new, lat_new = staleness._schedule(
+        cfg, fplan, age, lat)
+    # slot 1: age 0 -> 1 >= lat 1: arrives, admitted at gamma**1
+    # slot 2: age 0 -> 1 <  lat 2: still in flight
+    # slot 3: age 1 -> 2 >= lat 2: arrives, admitted at gamma**2
+    # slot 4: empty + delayed: stores (lat 2)
+    # slot 5: busy (not arriving: age 0 -> 1 < lat 3) + delayed: the new
+    #         uplink is DROPPED -- one in-flight slot per client
+    np.testing.assert_array_equal(np.asarray(arriving),
+                                  [False, True, False, True, False, False])
+    np.testing.assert_array_equal(np.asarray(admit),
+                                  [False, True, False, True, False, False])
+    np.testing.assert_array_equal(np.asarray(store),
+                                  [False, False, False, False, True, False])
+    np.testing.assert_allclose(np.asarray(w), [0.0, 0.5, 0.0, 0.25, 0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(age_new), [-1, -1, 1, -1, 0, 1])
+    np.testing.assert_array_equal(np.asarray(lat_new), [0, 0, 2, 0, 2, 3])
+    # a lateness past max_staleness arrives but is dropped, not admitted
+    cfg0 = _cfg(max_staleness=1, stale_gamma=0.5)
+    _, w0, arr0, adm0, _, _ = staleness._schedule(cfg0, fplan, age, lat)
+    np.testing.assert_array_equal(np.asarray(arr0),
+                                  [False, True, False, True, False, False])
+    np.testing.assert_array_equal(np.asarray(adm0),
+                                  [False, True, False, False, False, False])
+    assert float(w0[3]) == 0.0
+
+
+def test_step_arena_hand_computed():
+    cfg = _cfg(max_staleness=2, stale_gamma=0.5)
+    m, w_ = 3, 4
+    uplink = jnp.arange(m * w_, dtype=jnp.float32).reshape(m, w_) + 1.0
+    cache = -jnp.ones((m, w_), jnp.float32)
+    buf = 10.0 * jnp.ones((m, w_), jnp.float32)
+    # client 0: fresh; client 1: arriving admitted (age0/lat1);
+    # client 2: delayed now (stores into its empty slot)
+    state = {"stale_buf": buf,
+             "stale_age": jnp.asarray([-1, 0, -1], jnp.int32),
+             "stale_lat": jnp.asarray([0, 1, 0], jnp.int32)}
+    fplan = _hand_plan([False, False, True], [0, 0, 2])
+    mixed, fresh, upd, mx = staleness.step_arena(
+        cfg, fplan, uplink, cache, None, state)
+    np.testing.assert_array_equal(np.asarray(fresh), [True, True, False])
+    # client 0: fresh uplink straight through
+    np.testing.assert_array_equal(np.asarray(mixed[0]), np.asarray(uplink[0]))
+    # client 1: fresh base mixed half-way toward the buffered row
+    np.testing.assert_allclose(
+        np.asarray(mixed[1]), np.asarray(0.5 * uplink[1] + 0.5 * buf[1]))
+    # client 2: delayed -> cache covers it this round, uplink into the slot
+    np.testing.assert_array_equal(np.asarray(mixed[2]), np.asarray(cache[2]))
+    np.testing.assert_array_equal(np.asarray(upd["stale_buf"][2]),
+                                  np.asarray(uplink[2]))
+    np.testing.assert_array_equal(np.asarray(upd["stale_age"]), [-1, -1, 0])
+    np.testing.assert_array_equal(np.asarray(upd["stale_lat"]), [0, 0, 2])
+    assert float(mx["stale_buffered"]) == 1.0
+    assert float(mx["stale_admitted"]) == 1.0
+    assert float(mx["stale_dropped"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the fused kernel: interpret parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 128), (6, 384), (5, 130)],
+                         ids=["one_block", "multi", "padded_width"])
+@pytest.mark.parametrize("per_row", [False, True], ids=["bcast", "per_row"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_stale_mix_kernel_interpret_parity(shape, per_row, dtype):
+    m, w_ = shape
+    ks = jax.random.split(jax.random.key(0), 3)
+    uplink = jax.random.normal(ks[0], (m, w_), jnp.float32).astype(dtype)
+    cache = jax.random.normal(
+        ks[1], (m, w_) if per_row else (w_,), jnp.float32).astype(dtype)
+    buf = jax.random.normal(ks[2], (m, w_), jnp.float32).astype(dtype)
+    fresh = jnp.arange(m) % 2 == 0
+    store = jnp.arange(m) % 3 == 0
+    w = jnp.where(jnp.arange(m) % 2 == 1, 0.5 ** (1 + jnp.arange(m) % 3), 0.0
+                  ).astype(jnp.float32)
+    mx, bx = ops.stale_mix(uplink, cache, buf, fresh, store, w, impl="xla")
+    mp, bp = ops.stale_mix(uplink, cache, buf, fresh, store, w,
+                           impl="pallas_interpret")
+    # the w == 0 guard is BITWISE (it is what makes the synchronous collapse
+    # exact); admitted rows agree to kernel-parity tolerance (FMA contraction
+    # inside the fused body is a one-ulp reassociation)
+    guarded = np.asarray(w) == 0.0
+    np.testing.assert_array_equal(np.asarray(mx)[guarded],
+                                  np.asarray(mp)[guarded])
+    np.testing.assert_allclose(
+        np.asarray(mx, np.float32), np.asarray(mp, np.float32),
+        rtol=1e-5, atol=1e-5)
+    # the buffer update is a pure select: bitwise everywhere
+    np.testing.assert_array_equal(np.asarray(bx), np.asarray(bp))
+
+
+def test_stale_mix_guard_is_bitwise_select():
+    # w == 0 must return the masked select EXACTLY, even against a buffer
+    # full of non-finite garbage (0 * inf = nan must never leak in)
+    m, w_ = 4, 130
+    uplink = jax.random.normal(jax.random.key(0), (m, w_))
+    cache = jax.random.normal(jax.random.key(1), (m, w_))
+    buf = jnp.full((m, w_), jnp.inf)
+    fresh = jnp.asarray([True, False, True, False])
+    zero_w = jnp.zeros((m,), jnp.float32)
+    expect = jnp.where(fresh[:, None], uplink, cache)
+    for impl in ("xla", "pallas_interpret"):
+        mixed, _ = ops.stale_mix(uplink, cache, buf, fresh,
+                                 jnp.zeros((m,), bool), zero_w, impl=impl)
+        np.testing.assert_array_equal(np.asarray(mixed), np.asarray(expect),
+                                      err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole invariant: synchronous collapse, bitwise, all four algorithms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_arena", [True, False], ids=["arena", "pytree"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_sync_point_collapses_to_masked_round(algo, use_arena):
+    rounds = 5
+    kw = dict(delay=0.4, seed=11, use_arena=use_arena)
+    # async engine FORCED on at the synchronous point vs delay-as-silence
+    s_async, rows_async = _run(_cfg(algo, async_rounds=True,
+                                    max_staleness=0, **kw), rounds)
+    s_sync, _ = _run(_cfg(algo, async_rounds=False, **kw), rounds)
+    assert STALE_KEYS <= set(s_async) and not (STALE_KEYS & set(s_sync))
+    _assert_trees_equal(s_async, s_sync, ignore=STALE_KEYS)
+    # nothing was ever admitted; delayed rows did buffer
+    assert sum(float(r["stale_admitted"]) for r in rows_async) == 0.0
+    assert sum(float(r["stale_buffered"]) for r in rows_async) > 0.0
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_deadline_demotes_all_collapses(algo):
+    # deadline < 1 demotes every straggler at plan time: even WITH
+    # max_staleness > 0 the round is bitwise the delay-as-silence round
+    rounds = 4
+    s_dead, rows = _run(_cfg(algo, use_arena=True, max_staleness=3,
+                             deadline=0.5), rounds)
+    s_sync, _ = _run(_cfg(algo, use_arena=True, async_rounds=False), rounds)
+    _assert_trees_equal(s_dead, s_sync, ignore=STALE_KEYS)
+    assert sum(float(r["stale_buffered"]) for r in rows) == 0.0
+
+
+def test_stale_trace_replays_bitwise():
+    cfg = _cfg("gpdmm", use_arena=True, max_staleness=3, stale_gamma=0.7)
+    s1, r1 = _run(cfg, 6)
+    s2, r2 = _run(cfg, 6)
+    _assert_trees_equal(s1, s2)
+    for a, b in zip(r1, r2):
+        for k in ("stale_buffered", "stale_admitted", "stale_dropped"):
+            assert float(a[k]) == float(b[k])
+
+
+def test_stale_round_admits_and_covers():
+    # a real stale run: rows buffer, age, arrive, and get admitted; drops
+    # only happen past max_staleness
+    cfg = _cfg("gpdmm", use_arena=True, max_staleness=4, stale_gamma=0.7)
+    _, rows = _run(cfg, 12)
+    tot = {k: sum(float(r[k]) for r in rows)
+           for k in ("stale_buffered", "stale_admitted", "stale_dropped")}
+    assert tot["stale_buffered"] > 0
+    assert tot["stale_admitted"] > 0
+    assert tot["stale_dropped"] == 0.0  # delay_max=4 <= max_staleness
+    # in-flight conservation: everything buffered either arrived or is
+    # still in flight at the end
+    assert tot["stale_admitted"] <= tot["stale_buffered"]
+
+
+def test_stale_run_converges_on_quadratic():
+    # acceptance: a delayed-but-admitted run lands within a factor of the
+    # fault-free run on a real objective
+    prob = quadratic.generate(jax.random.key(0), m=8, n=60, d=D)
+    eta = 0.5 / prob.L
+    rounds = 40
+    base = dict(algorithm="gpdmm", inner_steps=3, eta=eta, use_arena=True)
+
+    def obj(cfg):
+        opt = make(cfg)
+        s = opt.init(jnp.zeros((prob.d,)), prob.m)
+        for _ in range(rounds):
+            s, _ = opt.round(s, prob.oracle(), prob.batch())
+        return float(prob.F(opt.server_params(s)))
+
+    clean = obj(FederatedConfig(**base))
+    stale = obj(FederatedConfig(
+        faults=FaultConfig(delay=0.25, seed=7), max_staleness=3,
+        stale_gamma=0.5, **base))
+    scale = float(prob.F(jnp.zeros((prob.d,))) - prob.f_star)
+    assert math.isfinite(stale)
+    assert abs(stale - clean) <= 0.15 * scale
+
+
+# ---------------------------------------------------------------------------
+# bitwise --resume replay of a stale trace through the launcher
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_resume_replays_stale_trace_bitwise(tmp_path):
+    from repro.launch.train import run as train_run
+
+    kw = dict(reduced=True, algorithm="gpdmm", k=1, eta=0.05, m=2,
+              per_client_batch=2, seq_len=16, seed=0, log_every=2,
+              faults="delay=0.5,straggler=0.2,seed=11",
+              deadline=3.0, max_staleness=2)
+    d_a, d_b = str(tmp_path / "a"), str(tmp_path / "b")
+    train_run("olmo-1b", steps=4, ckpt_dir=d_a, **kw)
+    train_run("olmo-1b", steps=2, ckpt_dir=d_b, **kw)
+    train_run("olmo-1b", steps=4, ckpt_dir=d_b, resume=True, **kw)
+    a = ckpt.load(d_a)["fed_state"]
+    b = ckpt.load(d_b)["fed_state"]
+    assert "stale_buf" in a
+    _assert_trees_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap serving satellites
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_steps_listing(tmp_path):
+    assert ckpt.steps(tmp_path / "nope") == []
+    for s in (3, 1, 7):
+        ckpt.save(tmp_path, s, {"x": jnp.arange(2.0)})
+    assert ckpt.steps(tmp_path) == [1, 3, 7]
+    assert ckpt.latest_step(tmp_path) == 7
+
+
+def test_load_with_retry_recovers_transient(tmp_path, monkeypatch):
+    from repro.launch import serve
+
+    ckpt.save(tmp_path, 5, {"x": jnp.arange(3.0)})
+    calls = {"n": 0}
+    real_load = ckpt.load
+
+    def flaky(path, step=None):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return real_load(path, step)
+
+    monkeypatch.setattr(serve.ckpt, "load", flaky)
+    out = serve.load_with_retry(str(tmp_path), 5, retries=3, backoff=0.001)
+    assert calls["n"] == 3 and int(out["x"][2]) == 2
+    # persistent failure propagates after the schedule is exhausted
+    calls["n"] = -10**9
+    with pytest.raises(OSError):
+        serve.load_with_retry(str(tmp_path), 5, retries=2, backoff=0.001)
+
+
+def test_hot_swap_watcher_rejects_truncation_keeps_last_good(tmp_path):
+    from repro.launch.serve import HotSwapWatcher
+
+    pay = {"server": {"w": jnp.arange(3.0)}, "round": 2}
+    ckpt.save(tmp_path, 2, pay)
+    w = HotSwapWatcher(str(tmp_path), retries=2, backoff=0.001)
+    assert int(w.poll()["round"]) == 2 and w.step == 2
+    assert w.poll() is None  # nothing newer
+
+    # a truncated file at the NEWEST step: rejected loudly, last-good kept
+    (tmp_path / "step_00000009.msgpack").write_bytes(b"\x00" * 17)
+    assert w.poll() is None
+    assert w.failures == 1 and 9 in w.bad and w.step == 2
+    assert w.poll() is None  # bad step is remembered, not retried
+    assert w.failures == 1
+
+    # a good NEWER step behind the bad one still swaps in
+    ckpt.save(tmp_path, 6, {"server": {"w": jnp.arange(3.0)}, "round": 6})
+    got = w.poll()
+    assert got is not None and w.step == 6 and int(got["round"]) == 6
+    assert w.swaps == 2
