@@ -55,6 +55,10 @@ GATED = [
     # stale_mix admission at max_staleness=2); normalised by its same-run
     # pytree stale sibling like every arena cell
     {"algo": "gpdmm", "variant": "stale", "path": "arena"},
+    # ISSUE 8: the host-resident population-store round (host gather ->
+    # staged device body -> host scatter + incremental f64 mean); a pytree
+    # sibling exists for the same shape, so this normalises like the rest
+    {"algo": "gpdmm", "variant": "partial", "path": "popstore"},
 ]
 # "topology" (ISSUE 4) distinguishes the gpdmm_graph rows (star/ring/
 # complete at the same problem shape); records predating it key as None

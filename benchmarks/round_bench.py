@@ -44,6 +44,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import time
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +52,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_fn, time_round_donated
 from repro.configs.base import FaultConfig, FederatedConfig
 from repro.core import arena, make, make_oracle, make_scan_rounds, pdmm_graph
+from repro.core import popstore
 from repro.core.tree_util import cohort_count
 from repro.kernels import ops
 
@@ -349,6 +351,139 @@ def bench_cohort(problem: str = "lm_flat", K: int = 4):
     return records
 
 
+# PR 8: host-resident population store (core.popstore) -- the resident
+# (m, width) client buffers live in host numpy and only the sampled cohort
+# stages to device, so device memory is O(cohort), not O(m).  Two kinds of
+# rows: (1) a gated (lm_flat, gpdmm, partial, popstore) cell at the matrix
+# shape, directly comparable to the path=arena / path=arena_cohort cells at
+# the same key -- it prices the host driver (gather/scatter + prefetch ring
+# + device_put) against the all-device cohort round; (2) the population
+# sweep, m = 10^3 .. 10^6 at a fixed 64-client cohort and the smallest
+# LM-scale arena row (width = 1024, the arena_min_width floor -- the full
+# lm_flat row at m = 10^6 would be a 4 TB host store).  The store's OWN
+# per-round cost (gather/stage/scatter + the f64 running-sum update) is
+# O(cohort) and stays flat in m; what still scales with m is the seeded
+# participation draw (permutation(key, m) < n -- the contract that keeps
+# every layout on the same mask sequence), which EVERY cohort round pays
+# regardless of layout, so it is timed separately (draw_us) and reported
+# next to the whole-round figure.  device_state_bytes stays O(cohort) while
+# host_state_bytes grows 1000x across the sweep.
+POP_SWEEP_M = (1_000, 10_000, 100_000, 1_000_000)
+POP_WIDTH = 1024
+POP_COHORT = 64
+
+
+def _mem_available_bytes():
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        return None
+    return None
+
+
+def _time_host_round(runner, state, batch, iters: int = 8):
+    """Median us/round of the HOST-driver popstore round.  ``time_fn`` /
+    ``time_round_donated`` jit their argument, which a host function cannot
+    be; the runner's own np.asarray sync already bounds each iteration."""
+    state, _ = runner.round(state, batch)  # warmup: compiles the device body
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state, _ = runner.round(state, batch)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def bench_popsweep(K: int = 4):
+    jax.clear_caches()
+    records = []
+
+    # (1) gated cell: popstore at the matrix shape/key (lm_flat, partial),
+    # same m/participation as the arena + arena_cohort cells it sits beside
+    spec = PROBLEMS["lm_flat"]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    n = sum(int(jnp.size(v)) for v in params.values())
+    batch = {"dummy": jnp.zeros((m, 1))}
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=0.1,
+                          use_arena=True, participation=0.5, cohort=True,
+                          popstore=True, popstore_min_clients=1)
+    runner = popstore.Runner(cfg, _native_grad)
+    state = runner.init(jax.tree.map(jnp.copy, params), m)
+    us = _time_host_round(runner, state, batch)
+    mc = cohort_count(m, 0.5)
+    rec = _record("lm_flat", "gpdmm", "partial", "popstore", "native",
+                  "per_round", m, n, K, us, cohort_round_passes(K, m, mc))
+    rec["participation"] = 0.5
+    rec["m_active"] = mc
+    rec["device_state_bytes"] = popstore.device_bytes(cfg, 1 << 20, m)
+    records.append(rec)
+    print(f"  -> lm_flat/gpdmm/partial popstore: {rec['us_per_round']:.0f} "
+          f"us/round (host store, cohort {mc}/{m})")
+
+    # (2) the population sweep at fixed cohort size
+    width = POP_WIDTH
+    pp = {"w": jnp.zeros((width,), jnp.float32) + 0.5}
+    avail = _mem_available_bytes()
+    for m in POP_SWEEP_M:
+        part = POP_COHORT / m
+        cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=0.1,
+                              use_arena=True, arena_min_width=width,
+                              participation=part, cohort=True,
+                              popstore=True, popstore_min_clients=1)
+        n_buf = len(popstore.POP_BUFFERS["gpdmm"])
+        host_bytes = n_buf * m * width * 4
+        # loud memory guard, never a silent cap: the 10^6 cell needs ~8 GB
+        # of host store (+ transient init), far past a 7 GB CI runner
+        if avail is not None and host_bytes * 2 > avail:
+            print(f"  -> popsweep m={m}: SKIPPED (host store needs "
+                  f"{host_bytes / 1e9:.1f} GB x2, only "
+                  f"{avail / 1e9:.1f} GB available)")
+            continue
+        jax.clear_caches()
+        runner = popstore.Runner(cfg, _native_grad)
+        state = runner.init(pp, m)
+        batch = {"dummy": jnp.zeros((m, 1))}
+        us = _time_host_round(runner, state, batch)
+        # the participation draw alone: O(m log m) on every cohort layout
+        draw_ts = []
+        for r in range(4):
+            t0 = time.perf_counter()
+            jax.block_until_ready(runner._idx_fn(jnp.int32(r)))
+            draw_ts.append(time.perf_counter() - t0)
+        draw_us = sorted(draw_ts)[len(draw_ts) // 2] * 1e6
+        dev_bytes = popstore.device_bytes(cfg, width, m)
+        mc = cohort_count(m, part)
+        assert mc == POP_COHORT, (m, part, mc)  # the tolerant-ceil contract
+        rec = {
+            "problem": "popsweep", "algo": "gpdmm", "variant": f"m{m}",
+            "path": "popstore", "oracle": "native", "driver": "per_round",
+            "m": m, "n_params": width, "K": K,
+            "us_per_round": round(us, 1),
+            "hbm_passes": 0,
+            "state_bytes": host_bytes,
+            "effective_GBps": 0.0,
+            "participation": part,
+            "m_active": mc,
+            "draw_us": round(draw_us, 1),
+            "host_state_bytes": host_bytes,
+            "device_state_bytes": dev_bytes,
+        }
+        emit(f"round_popsweep_gpdmm_m{m}_popstore", us,
+             f"draw_us={draw_us:.0f},host_GB={host_bytes / 1e9:.2f},"
+             f"device_MB={dev_bytes / 1e6:.2f}")
+        records.append(rec)
+        print(f"  -> popsweep m={m}: {us:.0f} us/round (draw {draw_us:.0f} "
+              f"us), host {host_bytes / 1e9:.2f} GB, staged device "
+              f"{dev_bytes / 1e6:.2f} MB (cohort {mc})")
+        del state, runner
+    return records
+
+
 # ISSUE 4: decentralized graph-PDMM rows -- ring vs star vs complete at the
 # LM-scale flat shape.  One graph round = (per firing phase) the fused
 # neighbor reduce over the (2E, width) edge-dual arena, the K-step inner
@@ -576,11 +711,27 @@ def run(out_path: str = "BENCH_round.json"):
             for variant in variants:
                 trajectory.extend(bench_round(problem, algo, variant))
     trajectory.extend(bench_cohort())
+    trajectory.extend(bench_popsweep())
     trajectory.extend(bench_topology())
     trajectory.extend(bench_screen())
     trajectory.extend(bench_stale())
     payload = {
         "bench": "round_bench",
+        "popstore_note": "path=popstore rows (PR 8) run the host-resident "
+                "population store (core.popstore): client buffers live in "
+                "host numpy, only the sampled cohort stages to device "
+                "(prefetch-overlapped), and the server mean is maintained "
+                "incrementally in compensated f64.  The (lm_flat, gpdmm, "
+                "partial, popstore) cell is regression-gated beside the "
+                "arena/arena_cohort cells at the same key; the "
+                "problem=popsweep rows sweep m = 10^3..10^6 at a FIXED "
+                "64-client cohort and width 1024 -- host_state_bytes grows "
+                "1000x while device_state_bytes stays O(cohort), and the "
+                "store's own staging cost stays flat (us_per_round minus "
+                "draw_us, the O(m log m) seeded participation draw every "
+                "cohort layout pays).  Sweep cells whose host store would "
+                "not fit in available memory are SKIPPED with a printed "
+                "notice (never silently).",
         "stale_note": "stale_mix rows (ISSUE 7) time the fused bounded-"
                 "staleness admission kernel alone -- ONE pass over the "
                 "uplink/cache/stale-buffer arenas (3r + 2w) emitting the "

@@ -8,11 +8,24 @@ unboundedly.  ``load`` rejects truncated or corrupt files loudly, naming the
 file, instead of returning a garbage tree.  Handles nested dict/list/tuple
 pytrees of jax/numpy arrays and python scalars; bfloat16 round-trips via
 ml_dtypes.
+
+Large arrays (anything over ``CHUNK_BYTES``, notably the host-resident
+population store's (m, width) buffers at m=10^6) are STREAMED: the tree is
+written as a small skeleton object with per-array placeholders, followed by
+the arrays' bytes in bounded chunks appended to the same msgpack stream.
+Peak transient memory during save/load is therefore O(CHUNK_BYTES), not
+O(state) -- the old single-``packb`` path briefly held a full second copy
+of the state while building the output buffer, which at a 10^6-row store
+doubles the job's host memory exactly when it is largest.  Streamed arrays
+load back as HOST numpy arrays (they are written only for host-resident
+state; pushing 10^6 rows to device on load would defeat the store).
 """
 from __future__ import annotations
 
+import math
 import os
 import pathlib
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -23,6 +36,17 @@ import numpy as np
 
 _ARR = "__arr__"
 _TUP = "__tup__"
+_CHUNKED = "__chunked__"
+
+# Arrays above this size stream in chunks of this many bytes.  16 MiB keeps
+# the per-chunk copy negligible while the msgpack framing overhead (a few
+# bytes per chunk) stays irrelevant.
+CHUNK_BYTES = 16 << 20
+
+# Pending-data bound for the streaming reader: must admit the largest single
+# msgpack object -- legacy (pre-streaming) files inline whole arrays as one
+# bin, so keep this effectively unlimited.
+_MAX_BUFFER = 2**31 - 1
 
 
 def _encode(obj):
@@ -52,6 +76,10 @@ def _unpack(obj):
     if isinstance(obj, dict):
         if obj.get(_ARR):
             arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"])).reshape(obj["shape"])
+            if arr.dtype == np.float64:
+                # f64 is host-only state (the popstore's running sums):
+                # jnp.asarray would SILENTLY downcast to f32 with x64 off
+                return arr.copy()  # writable, frombuffer views are read-only
             return jnp.asarray(arr)
         if _TUP in obj:
             items = [_unpack(v) for v in obj["items"]]
@@ -60,34 +88,105 @@ def _unpack(obj):
     return obj
 
 
+def _split_large(tree):
+    """Replace every array larger than ``CHUNK_BYTES`` with a placeholder
+    dict; returns ``(skeleton, ordered list of the extracted host arrays)``.
+    The skeleton packs small (placeholders carry dtype/shape/id only), so
+    ``packb`` of it never holds a second copy of the big buffers."""
+    big: list[np.ndarray] = []
+
+    def rec(t):
+        if isinstance(t, dict):
+            return {k: rec(v) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            vals = [rec(v) for v in t]
+            return tuple(vals) if isinstance(t, tuple) else vals
+        if isinstance(t, (jax.Array, np.ndarray)):
+            arr = np.asarray(t)
+            if arr.nbytes > CHUNK_BYTES:
+                big.append(arr)
+                return {_CHUNKED: True, "dtype": str(arr.dtype),
+                        "shape": list(arr.shape), "id": len(big) - 1}
+        return t
+
+    return rec(tree), big
+
+
+def _graft(obj, slots):
+    """Swap restored chunked arrays back into their placeholder positions."""
+    if isinstance(obj, dict):
+        if obj.get(_CHUNKED):
+            return slots[obj["id"]]
+        return {k: _graft(v, slots) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        vals = [_graft(v, slots) for v in obj]
+        return tuple(vals) if isinstance(obj, tuple) else vals
+    return obj
+
+
 def save(path: str | os.PathLike, step: int, tree: Any, *,
          keep: Optional[int] = None) -> str:
     """Write ``step`` atomically; with ``keep``, prune all but the newest
-    ``keep`` checkpoints afterwards (zero-padded names sort numerically)."""
+    ``keep`` checkpoints afterwards (zero-padded names sort numerically).
+    Arrays over ``CHUNK_BYTES`` stream to the file in bounded chunks."""
     path = pathlib.Path(path)
     path.mkdir(parents=True, exist_ok=True)
     final = path / f"step_{step:08d}.msgpack"
     tmp = final.with_suffix(".tmp")
     tree = jax.tree.map(lambda x: jax.device_get(x) if isinstance(x, jax.Array) else x, tree)
+    skeleton, big = _split_large(tree)
+    packer = msgpack.Packer(use_bin_type=True)
     with open(tmp, "wb") as f:
-        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+        f.write(packer.pack(_pack(skeleton)))
+        for k, arr in enumerate(big):
+            arr = np.ascontiguousarray(arr)
+            flat = arr.reshape(-1).view(np.uint8)
+            n_chunks = max(1, math.ceil(arr.nbytes / CHUNK_BYTES))
+            f.write(packer.pack({"id": k, "n_chunks": n_chunks}))
+            for c in range(n_chunks):
+                f.write(packer.pack(
+                    flat[c * CHUNK_BYTES:(c + 1) * CHUNK_BYTES].tobytes()))
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, final)
     if keep is not None and keep > 0:
-        for old in sorted(path.glob("step_*.msgpack"))[:-keep]:
-            old.unlink(missing_ok=True)
+        # prune by PARSED step number, not raw glob order: a stray
+        # non-numeric step_*.msgpack must neither survive at a real
+        # anchor's expense nor crash the prune
+        for n in steps(path)[:-keep]:
+            (path / f"step_{n:08d}.msgpack").unlink(missing_ok=True)
     return str(final)
+
+
+def _parse_step(p: pathlib.Path) -> Optional[int]:
+    stem = p.stem
+    suffix = stem.split("_", 1)[1] if "_" in stem else ""
+    if suffix.isdigit():
+        return int(suffix)
+    return None
 
 
 def steps(path: str | os.PathLike) -> list[int]:
     """All on-disk checkpoint steps, ascending.  Consumers that must survive
     a bad newest file (the hot-swap serving watcher) walk this list from the
-    tail instead of trusting ``latest_step`` alone."""
+    tail instead of trusting ``latest_step`` alone.  Files matching the glob
+    but with a non-numeric suffix (step_tmp.msgpack from some other writer,
+    editor droppings) are SKIPPED with a warning instead of raising -- one
+    stray file must not take down --resume, the watchdog rollback walk, or
+    the serve watcher."""
     path = pathlib.Path(path)
     if not path.exists():
         return []
-    return sorted(int(p.stem.split("_")[1]) for p in path.glob("step_*.msgpack"))
+    out = []
+    for p in path.glob("step_*.msgpack"):
+        n = _parse_step(p)
+        if n is None:
+            warnings.warn(
+                f"[ckpt] ignoring non-checkpoint file {p} (suffix is not a "
+                f"step number)", RuntimeWarning, stacklevel=2)
+            continue
+        out.append(n)
+    return sorted(out)
 
 
 def latest_step(path: str | os.PathLike) -> Optional[int]:
@@ -104,12 +203,69 @@ def load(path: str | os.PathLike, step: Optional[int] = None) -> Any:
     fp = path / f"step_{step:08d}.msgpack"
     if not fp.exists():
         raise FileNotFoundError(f"no checkpoint file {fp}")
-    with open(fp, "rb") as f:
-        raw = f.read()
     try:
-        return _unpack(msgpack.unpackb(raw, raw=False, strict_map_key=False))
-    except Exception as e:
+        with open(fp, "rb") as f:
+            unp = msgpack.Unpacker(f, raw=False, strict_map_key=False,
+                                   max_buffer_size=_MAX_BUFFER)
+            payload = _unpack(unp.unpack())
+            slots_meta = {}
+            _index_chunked(payload, slots_meta)
+            if not slots_meta:
+                _expect_eof(unp)
+                return payload
+            # streamed tail: per-array header + bounded chunks, in the order
+            # the writer extracted them; reassembled into preallocated HOST
+            # buffers so peak transient memory stays O(CHUNK_BYTES)
+            slots = {}
+            for _ in range(len(slots_meta)):
+                hdr = unp.unpack()
+                ph = slots_meta[int(hdr["id"])]
+                arr = np.empty([int(s) for s in ph["shape"]],
+                               dtype=np.dtype(ph["dtype"]))
+                flat = arr.reshape(-1).view(np.uint8)
+                off = 0
+                for _c in range(int(hdr["n_chunks"])):
+                    chunk = unp.unpack()
+                    flat[off:off + len(chunk)] = np.frombuffer(chunk, np.uint8)
+                    off += len(chunk)
+                if off != arr.nbytes:
+                    raise _Corrupt(
+                        f"chunked array id={hdr['id']} has {off} bytes, "
+                        f"expected {arr.nbytes}")
+                slots[int(hdr["id"])] = arr
+            _expect_eof(unp)
+            return _graft(payload, slots)
+    except (Exception,) as e:
         raise ValueError(
-            f"checkpoint {fp} is truncated or corrupt ({len(raw)} bytes): "
-            f"{e}; delete it and resume from an earlier step"
+            f"checkpoint {fp} is truncated or corrupt "
+            f"({fp.stat().st_size} bytes): {e}; delete it and resume from "
+            f"an earlier step"
         ) from e
+
+
+class _Corrupt(Exception):
+    pass
+
+
+def _expect_eof(unp):
+    """The file must contain exactly the checkpoint stream: trailing bytes
+    mean a corrupt or foreign file (the pre-streaming reader rejected them
+    via ``unpackb``'s ExtraData; the streaming reader must too)."""
+    try:
+        unp.unpack()
+    except msgpack.OutOfData:
+        return
+    raise _Corrupt("trailing data after checkpoint payload")
+
+
+def _index_chunked(obj, out: dict):
+    """Collect chunked-array placeholders by id into ``out``."""
+    if isinstance(obj, dict):
+        if obj.get(_CHUNKED):
+            out[int(obj["id"])] = obj
+            return
+        for v in obj.values():
+            _index_chunked(v, out)
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            _index_chunked(v, out)

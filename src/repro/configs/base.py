@@ -170,6 +170,26 @@ class FederatedConfig:
     # what makes ~10^5-10^6-row population arenas with small cohorts feasible
     # on one host.  Must divide the cohort size; None = one shot.
     cohort_tile: Optional[int] = None
+    # Host-resident population store (core.popstore, ISSUE 8): keep every
+    # resident (m, width) client-state buffer in HOST memory as numpy arrays,
+    # stage only the sampled cohort's rows onto device each round (with the
+    # next round's gather prefetched while the current round computes), and
+    # scatter the updated rows back after the tail -- device memory becomes
+    # O(cohort) while the population scales to 10^6 rows.  Server-side O(m)
+    # reads are O(cohort) too: the running sum(u_hat) is maintained
+    # incrementally (compensated f64) and the dense dual refresh is
+    # represented lazily as lam_i = rho*(u_hat_i - x_s).  Requires the
+    # cohort engine (arena path, participation < 1, star, no async);
+    # "auto" engages when the cohort engine runs and the population is at
+    # least ``popstore_min_clients``; True forces it whenever the cohort
+    # engine runs; False keeps the device-resident arena.  A popstore round
+    # equals the device-arena cohort round row-for-row at f32 on the same
+    # participation draw (tests/test_popstore.py).
+    popstore: bool | str = "auto"
+    # Population size at which "auto" moves the resident state off device.
+    # Below this the O(m) device buffers are cheap and the device-arena
+    # cohort round avoids per-round host<->device staging.
+    popstore_min_clients: int = 65_536
     # Seed for the participation RNG (folded with the round counter).  One
     # config field instead of a constant duplicated per algorithm, so two
     # algorithms under comparison draw IDENTICAL mask sequences by contract
@@ -280,6 +300,14 @@ class FederatedConfig:
             raise ValueError(
                 f"cohort_tile must be a positive tile size or None, got "
                 f"{self.cohort_tile}")
+        if self.popstore not in (True, False, "auto"):
+            raise ValueError(
+                f"popstore must be True, False or 'auto', got "
+                f"{self.popstore!r}")
+        if self.popstore_min_clients < 1:
+            raise ValueError(
+                f"popstore_min_clients must be >= 1, got "
+                f"{self.popstore_min_clients}")
         if self.screen not in (True, False, "auto"):
             raise ValueError(
                 f"screen must be True, False or 'auto', got {self.screen!r}")
@@ -303,7 +331,11 @@ class FederatedConfig:
         # the tiled map degenerates to one shot.
         if (self.cohort_tile is not None and self.num_clients is not None
                 and self.participation < 1.0):
-            mc = max(1, int(-(-self.participation * self.num_clients // 1)))
+            # the engine's single source of truth for the cohort size --
+            # duplicating the ceil here once overcounted by one on exact
+            # products like 0.07*100 (local import: core imports configs)
+            from repro.core.tree_util import cohort_count
+            mc = cohort_count(self.num_clients, self.participation)
             if self.cohort_tile < mc and mc % self.cohort_tile:
                 raise ValueError(
                     f"cohort_tile={self.cohort_tile} does not divide the "

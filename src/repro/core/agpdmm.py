@@ -32,9 +32,50 @@ from repro.core.api import (
 )
 from repro.core.gpdmm import (
     arena_metrics, arena_tail, cohort_tail, inner_steps, inner_steps_arena,
-    participation_key,
+    participation_key, popstore_tail,
 )
 from repro.kernels import ops
+
+
+def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
+    """Device half of a host-popstore AGPDMM round (see gpdmm.popstore_body):
+    only the ``u_hat`` rows stage -- the client init is the fresh server row
+    (no primal carry), and the dual rows reconstruct lazily from the staged
+    uplink cache via lam_{s|i} = rho (u_hat_i - x_s)."""
+    rho = resolved_rho(cfg)
+    K = cfg.inner_steps
+    f32 = jnp.float32
+
+    def body(server, staged, idx, round_idx, batch):
+        x_s_row = spec.pack(server["x_s"])
+        u_hat_c = staged["u_hat"]
+        lam_c = ops.dual_from_uplink(u_hat_c, x_s_row, rho)  # lazy dual
+        batch_c = cohort_batch(batch, idx, m, per_step)
+
+        def inner(rows, b):
+            (lam_t,) = rows
+            x0 = jnp.broadcast_to(x_s_row[None], lam_t.shape)
+            return inner_steps_arena(
+                spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta,
+                rho=rho, per_step=per_step,
+                vr_snapshot=x0 if cfg.variance_reduction == "svrg" else None,
+            )
+
+        x_K, _ = run_cohort_inner(cfg, inner, (lam_c,), batch_c,
+                                  per_step=per_step)
+        _, uplink = ops.round_tail(x_K, lam_c, x_s_row, rho,
+                                   with_lam_is=False)
+        uplink, keep_c, fm = popstore_tail(cfg, spec, x_s_row, u_hat_c,
+                                           uplink, idx, round_idx, m)
+        metrics = {
+            "client_drift": T.masked_client_mean(
+                jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)),
+                        axis=1), keep_c),
+            "used_arena": jnp.ones((), f32),
+        } | fm
+        return {"u_hat": uplink}, {}, metrics
+
+    return body
 
 
 def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):

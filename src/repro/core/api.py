@@ -202,6 +202,28 @@ def use_cohort(cfg: FederatedConfig, m: int) -> bool:
     return True
 
 
+def use_popstore(cfg: FederatedConfig, m: int) -> bool:
+    """Static policy: does this run keep the population's resident client
+    state in the HOST store (``core.popstore``) instead of device arenas?
+
+    The store rides the cohort engine (same participation draw, same
+    gather/scatter row contract), so it engages only where ``use_cohort``
+    does -- callers additionally gate on ``use_arena`` exactly as they do
+    for the cohort engine itself.  ``popstore="auto"`` moves the state off
+    device once the population reaches ``popstore_min_clients`` (below
+    that the O(m) device buffers are cheap and per-round host<->device
+    staging is pure overhead); ``True`` forces the store whenever the
+    cohort engine runs, ``False`` never uses it.  The popstore round is a
+    HOST-side driver (``popstore.Runner``) -- it cannot run inside an
+    outer jit, which is why the launchers dispatch on this policy instead
+    of ``FedOpt.round`` doing so internally."""
+    if cfg.popstore is False or not use_cohort(cfg, m):
+        return False
+    if cfg.popstore == "auto":
+        return m >= cfg.popstore_min_clients
+    return True
+
+
 def cohort_batch(batch, idx, m: int, per_step: bool):
     """Resolve the cohort's gradient batch.  Population-sized batch leaves
     (client dim == m) are row-gathered by ``idx``; leaves already sized to

@@ -24,9 +24,44 @@ from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, cohort_batch, run_cohort_inner, use_arena, use_cohort,
 )
-from repro.core.gpdmm import participation_key
+from repro.core.gpdmm import participation_key, popstore_tail
 from repro.core.scaffold import inner_steps_plain_arena
 from repro.kernels import ops
+
+
+def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
+    """Device half of a host-popstore FedAvg round (see gpdmm.popstore_body):
+    the cohort runs the plain K-step loop from the server row; only the
+    staged ``u_hat`` rows (EF21 integrator / silence fallback) move, and the
+    host driver maintains the population mean incrementally."""
+    K, eta = cfg.inner_steps, cfg.eta
+    f32 = jnp.float32
+
+    def body(server, staged, idx, round_idx, batch):
+        x_s_row = spec.pack(server["x_s"])
+        u_hat_c = staged["u_hat"]
+        batch_c = cohort_batch(batch, idx, m, per_step)
+
+        def inner(_rows, b):
+            mc = jax.tree.leaves(b)[0].shape[1 if per_step else 0]
+            x0 = jnp.broadcast_to(x_s_row[None], (mc, spec.width))
+            return inner_steps_plain_arena(
+                spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+                per_step=per_step,
+            )
+
+        x_K = run_cohort_inner(cfg, inner, (), batch_c, per_step=per_step)
+        uplink, keep_c, fm = popstore_tail(cfg, spec, x_s_row, u_hat_c, x_K,
+                                           idx, round_idx, m)
+        metrics = {
+            "client_drift": T.masked_client_mean(
+                jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)),
+                        axis=1), keep_c),
+            "used_arena": jnp.ones((), f32),
+        } | fm
+        return {"u_hat": uplink}, {}, metrics
+
+    return body
 
 
 def _num_clients(state, batch, per_step_batches):

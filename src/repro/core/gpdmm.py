@@ -253,6 +253,89 @@ def cohort_tail(cfg: FederatedConfig, spec, state, uplink, idx, fplan=None):
     }, keep_c, fm
 
 
+def popstore_tail(cfg: FederatedConfig, spec, x_s_row, u_hat_c, uplink, idx,
+                  round_idx, m):
+    """Cohort-resident round tail for the HOST-popstore path (shared by
+    GPDMM/AGPDMM/FedAvg): identical per-row math to ``cohort_tail`` --
+    fused EF21 against the STAGED cohort ``u_hat`` rows (the host store's
+    copy of exactly the rows ``cohort_tail`` would ``row_gather``), fault
+    injection + screening on the cohort uplink, and the combined keep-select
+    back to the staged rows.  What it does NOT do is the O(m) tail: no
+    scatter into a device-resident population buffer, no full-buffer mean,
+    no dense dual refresh -- the host driver (``core.popstore.Runner``)
+    scatters the returned rows into the host store and maintains the server
+    mean incrementally.  Returns ``(uplink, keep_c, fault_metrics)``."""
+    if cfg.uplink_bits is not None:
+        uplink = ops.ef21_update(uplink, u_hat_c, cfg.uplink_bits,
+                                 spec.leaf_rows())
+    fplan = faults.plan(cfg, round_idx, m)
+    plan_c = faults.take(fplan, idx)
+    uplink = faults.inject(cfg.faults, plan_c, uplink)
+    keep = None
+    if faults.screening_on(cfg):
+        keep = faults.screen_keep(cfg, uplink, x_s_row)
+    keep_c = faults.combine_mask(None, plan_c, keep)
+    if keep_c is not None:
+        # demoted/faulted cohort rows are silent: the store keeps their row
+        uplink = jnp.where(keep_c[:, None], uplink, u_hat_c)
+    fm = {}
+    if fplan is not None or keep is not None:
+        fm = faults.fault_metrics(
+            fplan, None if plan_c is None else ~plan_c.silent, keep)
+    return uplink, keep_c, fm
+
+
+def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
+    """Device half of a host-popstore GPDMM round (see ``core.popstore``).
+
+    The returned ``body(server, staged, idx, round_idx, batch)`` touches
+    ONLY O(cohort) device memory: ``staged`` carries the sampled rows of the
+    host store (``u_hat`` -- the server's cached uplink view -- and ``x_c``,
+    the primal carry), and the dual rows are reconstructed LAZILY via the
+    round invariant lam_{s|i} = rho (u_hat_i - x_s) (``ops.dual_from_uplink``
+    on the staged rows -- elementwise, so bit-identical to gathering rows of
+    the dense refresh the arena path materialises).  Returns
+    ``(rows_out, server_rows, metrics)`` where ``rows_out = {u_hat, x_c}``
+    scatters back into the host store."""
+    rho = resolved_rho(cfg)
+    K = cfg.inner_steps
+    f32 = jnp.float32
+
+    def body(server, staged, idx, round_idx, batch):
+        x_s_row = spec.pack(server["x_s"])
+        u_hat_c, x0_c = staged["u_hat"], staged["x_c"]
+        lam_c = ops.dual_from_uplink(u_hat_c, x_s_row, rho)  # lazy dual
+        batch_c = cohort_batch(batch, idx, m, per_step)
+
+        def inner(rows, b):
+            x0, lam_t = rows
+            snap = (jnp.broadcast_to(x_s_row[None], x0.shape)
+                    if cfg.variance_reduction == "svrg" else None)
+            return inner_steps_arena(
+                spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta,
+                rho=rho, per_step=per_step, vr_snapshot=snap,
+            )
+
+        x_K, x_bar = run_cohort_inner(cfg, inner, (x0_c, lam_c), batch_c,
+                                      per_step=per_step)
+        x_ref = x_bar if cfg.use_avg else x_K
+        _, uplink = ops.round_tail(x_ref, lam_c, x_s_row, rho,
+                                   with_lam_is=False)
+        uplink, keep_c, fm = popstore_tail(cfg, spec, x_s_row, u_hat_c,
+                                           uplink, idx, round_idx, m)
+        x_K_kept = (x_K if keep_c is None
+                    else jnp.where(keep_c[:, None], x_K, x0_c))
+        metrics = {
+            "client_drift": T.masked_client_mean(
+                jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)),
+                        axis=1), keep_c),
+            "used_arena": jnp.ones((), f32),
+        } | fm
+        return {"u_hat": uplink, "x_c": x_K_kept}, {}, metrics
+
+    return body
+
+
 def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     """GPDMM round over the SAMPLED COHORT (ISSUE 5): gather the round's
     active rows out of the population arena, run the fused inner loop +

@@ -93,6 +93,66 @@ def inner_steps_plain_arena(spec, grad_fn, x0, x_s_row, batch, *, K, eta,
     return x_K
 
 
+def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
+    """Device half of a host-popstore SCAFFOLD round (see
+    gpdmm.popstore_body): the cohort's ``c_i`` rows stage from the host
+    store.  Unlike GPDMM's, SCAFFOLD's cohort server update is ALREADY
+    O(cohort) on device (both all-reduces are sums over cohort deltas), so
+    this body computes the new server rows itself -- bit-identical to
+    ``_round_arena_cohort`` -- and returns them in ``server_rows``; only the
+    ``c_sum_norm`` diagnostic needs the host driver's incremental
+    ``sum(c_i)``."""
+    K, eta = cfg.inner_steps, cfg.eta
+    f32 = jnp.float32
+
+    def body(server, staged, idx, round_idx, batch):
+        x_s_row = spec.pack(server["x_s"])
+        c_row = spec.pack(server["c"])
+        c_i_c = staged["c_i"]
+        batch_c = cohort_batch(batch, idx, m, per_step)
+
+        def inner(rows, b):
+            (ci_t,) = rows
+            x0 = jnp.broadcast_to(x_s_row[None], ci_t.shape)
+            return inner_steps_plain_arena(
+                spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+                per_step=per_step, c_i=ci_t, c_row=c_row,
+            )
+
+        x_K = run_cohort_inner(cfg, inner, (c_i_c,), batch_c,
+                               per_step=per_step)
+
+        fplan = faults.plan(cfg, round_idx, m)
+        plan_c = faults.take(fplan, idx)
+        x_t = faults.inject(cfg.faults, plan_c, x_K)
+        c_i_new_c = ops.scaffold_cv(c_i_c, x_t, c_row, x_s_row, 1.0 / (K * eta))
+        keep = None
+        if faults.screening_on(cfg):
+            keep = faults.screen_keep(cfg, x_t, x_s_row)
+        keep_c = faults.combine_mask(None, plan_c, keep)
+        if keep_c is not None:
+            c_i_new_c = jnp.where(keep_c[:, None], c_i_new_c, c_i_c)
+            x_t = jnp.where(keep_c[:, None], x_t, x_s_row[None])
+        inv_m = 1.0 / m
+        x_s_new = x_s_row + cfg.eta_g * inv_m * jnp.sum(
+            (x_t - x_s_row[None]).astype(f32), axis=0).astype(x_s_row.dtype)
+        c_new = c_row + inv_m * jnp.sum(
+            (c_i_new_c - c_i_c).astype(f32), axis=0).astype(c_row.dtype)
+        metrics = {
+            "client_drift": T.masked_client_mean(
+                jnp.sum(jnp.square((x_K - x_s_row[None]).astype(f32)),
+                        axis=1), keep_c),
+            "used_arena": jnp.ones((), f32),
+        }
+        if fplan is not None or keep is not None:
+            metrics |= faults.fault_metrics(
+                fplan, None if plan_c is None else ~plan_c.silent, keep)
+        return ({"c_i": c_i_new_c},
+                {"x_s": x_s_new, "c": c_new}, metrics)
+
+    return body
+
+
 def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     """SCAFFOLD round over the sampled cohort (see gpdmm._round_arena_cohort):
     the cohort's c_i rows gather, run the offset inner loop + fused

@@ -6,6 +6,8 @@ the server aggregation of the paper's star graph.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -119,8 +121,20 @@ def cohort_count(m: int, frac: float) -> int:
     """Static active-cohort size: ceil(frac * m), at least 1.  The single
     source of truth shared by ``participation_mask`` and the cohort engine's
     gather tables -- the two MUST agree or gathered rounds drift from masked
-    ones."""
-    return max(1, int(-(-frac * m // 1)))  # ceil
+    ones.
+
+    The ceil is representation-tolerant: ``0.07 * 100`` is
+    ``7.000000000000001`` in binary floating point, and a naive float ceil
+    turns the documented "exactly ceil(frac*m)" into an overcount of one
+    (8 at m=100, 701 at m=10^4).  We round to the nearest integer first and
+    keep that integer whenever the product is within a few ulps of it."""
+    prod = frac * m
+    nearest = round(prod)
+    if abs(prod - nearest) <= 1e-9 * max(1.0, abs(prod)):
+        n = int(nearest)
+    else:
+        n = int(math.ceil(prod))
+    return max(1, n)
 
 
 def participation_mask(key, m: int, frac: float):

@@ -44,8 +44,8 @@ from repro import checkpoint as ckpt
 from repro.configs import get_arch
 from repro.configs.base import FaultConfig, FederatedConfig, ShapeConfig
 from repro.core import make as make_fed
-from repro.core import make_scan_rounds
-from repro.core.api import use_arena, use_cohort
+from repro.core import make_scan_rounds, popstore
+from repro.core.api import FedOpt, use_arena, use_cohort, use_popstore
 from repro.data.synthetic import cohort_lm_batches, lm_batches
 from repro.launch.mesh import make_smoke_mesh
 from repro.launch.steps import build_train_step
@@ -69,6 +69,7 @@ def run(
     log_every: int = 5,
     uplink_bits: int | None = None,
     participation: float = 1.0,
+    popstore_mode: bool | str = "auto",
     rounds_per_call: int = 1,
     faults: str | FaultConfig | None = None,
     screen: bool | str = "auto",
@@ -99,7 +100,8 @@ def run(
         return dataclasses.replace(
             cfg.fed, algorithm=algorithm, inner_steps=k, eta=eta * scale,
             num_clients=m, layout="client_axis", uplink_bits=uplink_bits,
-            participation=participation, rounds_per_call=rounds_per_call,
+            participation=participation, popstore=popstore_mode,
+            rounds_per_call=rounds_per_call,
             faults=fault_cfg, screen=screen, async_rounds=async_rounds,
             deadline=deadline, max_staleness=max_staleness,
             stale_gamma=stale_gamma,
@@ -137,6 +139,19 @@ def run(
             run_config["max_staleness"] = max_staleness
             run_config["stale_gamma"] = stale_gamma
 
+    # cohort engine active -> feed cohort-sized batches (rows = the round's
+    # active clients, sorted by id) so data is never generated for silent
+    # clients; popstore additionally moves the resident (m, width) client
+    # buffers to a HOST store and stages only the sampled cohort per round
+    # (core.popstore), making device memory O(cohort)
+    cohort = use_cohort(cfg.fed, m) and use_arena(cfg.fed, params)
+    pop_on = cohort and use_popstore(cfg.fed, m)
+    if pop_on:
+        # the store changes the checkpointed state LAYOUT (host buffers +
+        # running sums instead of device arenas), so it joins the resume
+        # fingerprint -- but only when on, so older checkpoints still resume
+        run_config["popstore"] = True
+
     def load_latest_good(what: str):
         """Newest LOADABLE checkpoint under ckpt_dir: a truncated or corrupt
         file at the newest step (a crash mid-copy, a bad disk) is skipped
@@ -171,6 +186,15 @@ def run(
             raise ValueError(
                 f"--resume config mismatch vs checkpoint (saved, requested): "
                 f"{diffs}; resuming would NOT continue the same trajectory")
+        if bool(saved_cfg.get("popstore", False)) != pop_on:
+            # popstore state (host store + running sums) and arena state
+            # (device buffers) are different LAYOUTS of the same trajectory;
+            # the round drivers cannot consume each other's checkpoints
+            raise ValueError(
+                f"--resume popstore mismatch: checkpoint was written with "
+                f"popstore={bool(saved_cfg.get('popstore', False))}, this "
+                f"run resolves popstore={pop_on} (popstore_mode="
+                f"{popstore_mode!r}); pass --popstore on/off to match")
         # the FULL federated state (arena buffers + server pytree + round
         # counter) resumes; the data stream re-keys from the round counter,
         # so the continuation is the uninterrupted trajectory.  fed.init is
@@ -198,10 +222,25 @@ def run(
     # With rounds_per_call > 1 the scan driver runs R full rounds per
     # dispatch over a leading-R batch stack (metrics come back stacked).
     R = max(1, rounds_per_call)
+    if pop_on and R > 1:
+        # the popstore round is a HOST driver (gather/scatter against host
+        # numpy + the prefetch ring): it cannot run under lax.scan
+        print(f"[train] popstore active: forcing rounds_per_call "
+              f"{rounds_per_call} -> 1 (host-side round driver)")
+        R = 1
 
     def build(scale: float):
         """(fed, step_fn, round_fn) at the given eta scale -- rebuilt after
         every watchdog backoff so the jitted round sees the new stepsize."""
+        if pop_on:
+            runner = popstore.Runner(fed_cfg(scale), client_grad)
+            # the FedOpt surface the rest of the launcher speaks, but
+            # round_fn is a HOST function -- no outer jit, no donation (the
+            # runner mutates its host store in place instead)
+            fed = FedOpt(name=algorithm, init=runner.init,
+                         round=runner.round,
+                         server_params=runner.server_params)
+            return fed, runner.round, runner.round
         fed = make_fed(fed_cfg(scale))
         round_fn = jax.jit(lambda s, b: fed.round(s, client_grad, b),
                            donate_argnums=(0,))
@@ -220,10 +259,6 @@ def run(
         return losses.mean()
 
     history = []
-    # cohort engine active -> feed cohort-sized batches (rows = the round's
-    # active clients, sorted by id; the engine's pass-through recognises the
-    # cohort-sized leading dim) so data is never generated for silent clients
-    cohort = use_cohort(cfg.fed, m) and use_arena(cfg.fed, params)
     n_rounds = steps - start
 
     def make_data(from_round: int):
@@ -351,10 +386,15 @@ def run(
                     return state, "diverged"
             return state, "done"
 
-        for i, batch in enumerate(data, start=from_round):
+        # ``i`` counts COMPLETED rounds after each dispatch (== the state's
+        # round counter), the same numbering the R>1 scan path logs -- loss
+        # curves from the two drivers line up row-for-row, and the guarded
+        # ``max(1, log_every)`` matches it too (--log-every 0 used to
+        # ZeroDivisionError here while the scan path survived)
+        for i, batch in enumerate(data, start=from_round + 1):
             state, metrics = step_fn(state, batch)
             note_faults(metrics)
-            if (i - from_round) % log_every == 0 or i == steps - 1:
+            if (i - 1) // max(1, log_every) != i // max(1, log_every) or i == steps:
                 eb = eval_batch if eval_batch is not None else batch
                 if log_round(i, state, metrics, eb):
                     return state, "diverged"
@@ -404,7 +444,8 @@ def run(
             "round": done,
             "config": run_config,
             "eta_scale": eta_scale,
-        })
+        }, keep=ckpt_keep)  # retention applies to the final save too, not
+        # just the periodic anchors -- a finished run keeps exactly ckpt_keep
         print(f"[train] full-state checkpoint (round {done}) saved to {ckpt_dir}")
     if fault_cfg is not None or watchdog:
         print(f"[train] robustness: faults_injected={injected_total:.0f} "
@@ -444,6 +485,10 @@ def main():
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients active per round (async PDMM; "
                          "< 1 runs the cohort-sampled round engine)")
+    ap.add_argument("--popstore", default="auto", choices=["auto", "on", "off"],
+                    help="host-resident population store: O(cohort) device "
+                         "memory with prefetch-overlapped staging (auto = on "
+                         "for cohort runs at >= popstore_min_clients)")
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="rounds per jitted dispatch (lax.scan round batching)")
     ap.add_argument("--log-every", type=int, default=5,
@@ -492,6 +537,7 @@ def main():
         k=args.k, eta=args.eta, m=args.clients, per_client_batch=args.batch,
         seq_len=args.seq, seed=args.seed, ckpt_dir=args.ckpt_dir, resume=args.resume,
         uplink_bits=args.uplink_bits, participation=args.participation,
+        popstore_mode={"auto": "auto", "on": True, "off": False}[args.popstore],
         rounds_per_call=args.rounds_per_call, log_every=args.log_every,
         faults=args.faults,
         screen={"auto": "auto", "on": True, "off": False}[args.screen],

@@ -1,0 +1,352 @@
+"""ISSUE 8: the host-resident population store + the cohort-sizing /
+logging / checkpoint bug sweep.
+
+Conformance contract: with the popstore on, every resident ``(m, width)``
+client buffer lives in HOST numpy and only the sampled cohort's rows stage
+to device -- and the resulting round must equal the all-device cohort round
+row for row at f32, on the same participation draw, for all four cohort
+algorithms.  The store's two approximating moves are pinned separately:
+
+  * the incrementally maintained compensated-f64 ``sum(u_hat)`` tracks the
+    dense column sum (and therefore the dense server mean at f32
+    resolution) over many rounds;
+  * the lazy dual ``lam_i = rho (u_hat_i - x_s)`` reconstructed from staged
+    rows equals the device path's resident ``lam_s`` buffer rows.
+
+Plus: prefetch-ring parity (the overlapped gather + intersect1d
+reconciliation is bitwise-identical to restaging from scratch), the
+streaming checkpoint round-trip (chunked save -> load -> continue equals
+the uninterrupted run), the train launcher's popstore wiring, and the bug
+sweep -- ``cohort_count`` exact products, ``--log-every 0``, final-ckpt
+retention, R=1/R>1 logged-round alignment, stray checkpoint files.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.checkpoint import msgpack_ckpt
+from repro.configs.base import FederatedConfig
+from repro.core import make, popstore, quadratic
+from repro.core import tree_util as T
+from repro.core.api import resolved_rho, use_popstore
+from repro.core.gpdmm import participation_key
+from repro.launch.train import run as train_run
+
+M = 8
+
+
+@pytest.fixture(scope="module", params=[24, 130], ids=["d24", "d130_odd"])
+def prob(request):
+    # d=24 -> width 128; d=130 -> width 256 with 126 zero-padded columns
+    return quadratic.generate(jax.random.key(0), m=M, n=60, d=request.param)
+
+
+def _cfg(prob, algo, *, participation=0.5, K=3, **kw):
+    return FederatedConfig(
+        algorithm=algo, inner_steps=K, eta=0.3 / prob.L, use_arena=True,
+        participation=participation, cohort=True, **kw)
+
+
+def _close(a, b, *, msg, atol=1e-5):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    scale = max(1.0, float(np.abs(a).max()))
+    np.testing.assert_allclose(a / scale, b / scale, atol=atol, err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# tentpole conformance: popstore round == device cohort round, same draw
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["plain", "ef21"])
+@pytest.mark.parametrize("algo", ["gpdmm", "agpdmm", "scaffold", "fedavg"])
+def test_popstore_matches_device_cohort(prob, algo, variant):
+    if variant == "ef21" and algo == "scaffold":
+        pytest.skip("SCAFFOLD+EF21 rejected by core.scaffold (two-variable uplink)")
+    kw = {"uplink_bits": 8} if variant == "ef21" else {}
+    cfg = _cfg(prob, algo, **kw)
+    x0 = jnp.zeros((prob.d,))
+
+    opt = make(cfg)
+    dev = opt.init(x0, prob.m)
+    runner = popstore.Runner(cfg, prob.oracle())
+    pop = runner.init(x0, prob.m)
+    rho = resolved_rho(cfg)
+    for r in range(4):
+        dev, _ = opt.round(dev, prob.oracle(), prob.batch())
+        pop, met = runner.round(pop, prob.batch())
+        tag = f"{algo}/{variant} round {r}"
+        _close(runner.server_params(pop), dev["x_s"], msg=f"{tag}: x_s")
+        for name in popstore.POP_BUFFERS[algo]:
+            # host store rows vs the device path's resident arena buffer
+            _close(pop["pop"][name], dev[name], msg=f"{tag}: {name}")
+        if algo == "gpdmm":
+            # the lazy dual: no (m, width) lam buffer exists in the store,
+            # yet rho (u_hat - x_s) reconstructs the device lam_s rows
+            x_row = np.asarray(runner._spec.pack(runner.server_params(pop)))
+            lam = rho * (pop["pop"]["u_hat"] - x_row[None])
+            _close(lam, dev["lam_s"], msg=f"{tag}: lazy dual vs lam_s")
+        assert float(met["used_popstore"]) == 1.0
+
+
+def test_popstore_metrics_expose_kkt_invariant(prob):
+    cfg = _cfg(prob, "gpdmm")
+    runner = popstore.Runner(cfg, prob.oracle())
+    s = runner.init(jnp.zeros((prob.d,)), prob.m)
+    for _ in range(3):
+        s, met = runner.round(s, prob.batch())
+    # eq. (25): sum_i lam_{s|i} = rho (sum_i u_hat_i - m x_s); the host
+    # metric computes it off the f64 running sum, so it must be finite and
+    # match a dense recomputation
+    dense = resolved_rho(cfg) * np.linalg.norm(
+        popstore._col_sum64(s["pop"]["u_hat"])
+        - prob.m * np.asarray(runner._spec.pack(s["x_s"]), np.float64))
+    np.testing.assert_allclose(float(met["lam_sum_norm"]), dense, rtol=1e-5)
+
+
+def test_popstore_requires_cohort_engine(prob):
+    runner = popstore.Runner(FederatedConfig(algorithm="gpdmm",
+                                             participation=1.0), prob.oracle())
+    with pytest.raises(ValueError, match="cohort"):
+        runner.init(jnp.zeros((prob.d,)), prob.m)
+    with pytest.raises(ValueError, match="popstore supports"):
+        popstore.Runner(FederatedConfig(algorithm="fedsplit"), prob.oracle())
+
+
+def test_use_popstore_policy():
+    on = FederatedConfig(participation=0.5, popstore=True)
+    auto = FederatedConfig(participation=0.5, popstore="auto",
+                           popstore_min_clients=100)
+    off = FederatedConfig(participation=0.5, popstore=False)
+    full = FederatedConfig(participation=1.0, popstore=True)
+    assert use_popstore(on, 8)
+    assert not use_popstore(auto, 8) and use_popstore(auto, 100)
+    assert not use_popstore(off, 10 ** 6)
+    assert not use_popstore(full, 10 ** 6)  # rides the cohort engine
+
+
+# ---------------------------------------------------------------------------
+# prefetch ring + incremental sum
+# ---------------------------------------------------------------------------
+
+def test_prefetch_ring_matches_restage(prob):
+    """The overlapped next-round gather (+ intersect1d reconciliation of
+    rows the current round just scattered) is a pure scheduling choice:
+    bitwise-identical to throwing the prefetch away and restaging."""
+    cfg = _cfg(prob, "gpdmm")
+    ra = popstore.Runner(cfg, prob.oracle())
+    rb = popstore.Runner(cfg, prob.oracle())
+    sa = ra.init(jnp.zeros((prob.d,)), prob.m)
+    sb = rb.init(jnp.zeros((prob.d,)), prob.m)
+    for r in range(5):
+        sa, _ = ra.round(sa, prob.batch())
+        rb._next = None  # kill the ring: force a from-scratch restage
+        sb, _ = rb.round(sb, prob.batch())
+        for name in popstore.POP_BUFFERS["gpdmm"]:
+            np.testing.assert_array_equal(
+                sa["pop"][name], sb["pop"][name],
+                err_msg=f"prefetch vs restage: {name} round {r}")
+        np.testing.assert_array_equal(
+            np.asarray(ra.server_params(sa)), np.asarray(rb.server_params(sb)),
+            err_msg=f"prefetch vs restage: x_s round {r}")
+
+
+def test_prefetch_overlaps_consecutive_cohorts(prob):
+    """The reconciliation actually fires: consecutive draws at p=0.5 on
+    m=8 overlap within a few rounds (seeded, so this is deterministic)."""
+    cfg = _cfg(prob, "gpdmm")
+    overlaps = 0
+    for r in range(5):
+        a, _ = T.cohort_indices(participation_key(cfg, jnp.int32(r)), M, 0.5)
+        b, _ = T.cohort_indices(participation_key(cfg, jnp.int32(r + 1)), M, 0.5)
+        overlaps += np.intersect1d(np.asarray(a), np.asarray(b)).size
+    assert overlaps > 0
+
+
+def test_incremental_sum_tracks_dense(prob):
+    """The Kahan-compensated running sum equals a dense chunked f64 column
+    sum of the store after many rounds -- the server mean never reads the
+    (m, width) buffer."""
+    cfg = _cfg(prob, "gpdmm")
+    runner = popstore.Runner(cfg, prob.oracle())
+    s = runner.init(jnp.zeros((prob.d,)), prob.m)
+    for _ in range(8):
+        s, _ = runner.round(s, prob.batch())
+    dense = popstore._col_sum64(s["pop"]["u_hat"])
+    scale = max(1.0, float(np.abs(dense).max()))
+    np.testing.assert_allclose(s["pop_sum"] / scale, dense / scale,
+                               atol=1e-10, err_msg="incremental vs dense sum")
+    # and the published x_s is that sum read at f32 resolution
+    x_row = np.asarray(runner._spec.pack(s["x_s"]), np.float64)
+    np.testing.assert_allclose(
+        x_row, (dense / prob.m).astype(np.float32).astype(np.float64),
+        rtol=0, atol=0, err_msg="x_s vs dense mean at f32")
+
+
+# ---------------------------------------------------------------------------
+# streaming checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_popstore_checkpoint_streams_and_resumes(prob, tmp_path, monkeypatch):
+    """Chunked save -> load -> continue equals the uninterrupted run.  A
+    tiny CHUNK_BYTES forces the store's (m, width) buffers down the
+    streaming path (skeleton + chunk bins) exactly as the real m=10^6
+    store would; streamed buffers must come back as WRITABLE host numpy
+    and the f64 running sums must survive without a silent f32 downcast."""
+    monkeypatch.setattr(msgpack_ckpt, "CHUNK_BYTES", 1024)
+    cfg = _cfg(prob, "gpdmm")
+    runner = popstore.Runner(cfg, prob.oracle())
+    s = runner.init(jnp.zeros((prob.d,)), prob.m)
+    for _ in range(2):
+        s, _ = runner.round(s, prob.batch())
+    ckpt.save(tmp_path, 2, s)
+    back = ckpt.load(tmp_path, 2)
+
+    for name, buf in back["pop"].items():
+        assert isinstance(buf, np.ndarray), f"{name} must load as host numpy"
+        np.testing.assert_array_equal(buf, s["pop"][name])
+    assert back["pop_sum"].dtype == np.float64, "running sum downcast on load"
+    np.testing.assert_array_equal(back["pop_sum"], s["pop_sum"])
+
+    # continue both: the restored trajectory is the uninterrupted one
+    r2 = popstore.Runner(cfg, prob.oracle())
+    for _ in range(3):
+        s, _ = runner.round(s, prob.batch())
+        back, _ = r2.round(back, prob.batch())
+    for name in popstore.POP_BUFFERS["gpdmm"]:
+        np.testing.assert_array_equal(s["pop"][name], back["pop"][name],
+                                      err_msg=f"resume drift: {name}")
+    np.testing.assert_array_equal(np.asarray(s["x_s"]), np.asarray(back["x_s"]))
+
+
+def test_checkpoint_roundtrip_at_10k_rows(tmp_path):
+    """The real streaming threshold (16 MiB), a real 10^4-row store: each
+    (10^4, 512) f32 buffer is 20 MB and takes the chunked path unpatched."""
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=2, eta=0.1,
+                          use_arena=True, participation=64 / 10_000,
+                          cohort=True, arena_min_width=512)
+    grad = lambda p, b: jax.tree.map(lambda x: x * 0.1, p)
+    runner = popstore.Runner(cfg, grad)
+    s = runner.init({"w": jnp.full((512,), 0.5)}, 10_000)
+    batch = {"dummy": jnp.zeros((10_000, 1))}
+    s, _ = runner.round(s, batch)
+    assert s["pop"]["u_hat"].nbytes > msgpack_ckpt.CHUNK_BYTES
+    ckpt.save(tmp_path, 1, s)
+    back = ckpt.load(tmp_path, 1)
+    for name in popstore.POP_BUFFERS["gpdmm"]:
+        assert isinstance(back["pop"][name], np.ndarray)
+        np.testing.assert_array_equal(back["pop"][name], s["pop"][name])
+    assert back["pop_sum"].dtype == np.float64
+    s, _ = runner.round(s, batch)
+    back, _ = popstore.Runner(cfg, grad).round(back, batch)
+    np.testing.assert_array_equal(s["pop"]["u_hat"], back["pop"]["u_hat"])
+
+
+def test_train_popstore_resume_roundtrip(tmp_path):
+    """launch.train with the store forced on: save-at-2 + --resume == the
+    uninterrupted run (identical logged rounds and losses)."""
+    kw = dict(reduced=True, algorithm="gpdmm", k=1, eta=0.05, m=8,
+              per_client_batch=2, seq_len=32, participation=0.5,
+              popstore_mode=True, log_every=1)
+    full = train_run("olmo-1b", steps=4, **kw)
+    part = train_run("olmo-1b", steps=2, ckpt_dir=str(tmp_path), **kw)
+    rest = train_run("olmo-1b", steps=4, ckpt_dir=str(tmp_path), resume=True,
+                     **kw)
+    hist = part + rest
+    assert [r["round"] for r in hist] == [r["round"] for r in full]
+    for a, b in zip(full, hist):
+        assert a["server_loss"] == pytest.approx(b["server_loss"], abs=1e-5)
+        assert a.get("used_popstore") == 1.0
+
+
+def test_train_popstore_resume_mode_mismatch_raises(tmp_path):
+    kw = dict(reduced=True, algorithm="gpdmm", k=1, eta=0.05, m=8,
+              per_client_batch=2, seq_len=32, participation=0.5, log_every=1)
+    train_run("olmo-1b", steps=2, ckpt_dir=str(tmp_path), popstore_mode=True,
+              **kw)
+    with pytest.raises(ValueError, match="popstore"):
+        train_run("olmo-1b", steps=4, ckpt_dir=str(tmp_path), resume=True,
+                  popstore_mode=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bug sweep
+# ---------------------------------------------------------------------------
+
+def test_cohort_count_exact_products():
+    """ceil(frac*m) must not overcount on exact products: 0.07*100 is
+    7.000000000000001 in binary and a naive float ceil said 8."""
+    assert T.cohort_count(100, 0.07) == 7
+    assert T.cohort_count(10_000, 0.07) == 700
+    assert T.cohort_count(8, 0.5) == 4
+    assert T.cohort_count(3, 0.5) == 2  # genuine ceil still rounds up
+    assert T.cohort_count(10, 0.01) == 1  # floor of one client
+    # the mask agrees with the count (the single-source-of-truth contract)
+    mask = T.participation_mask(jax.random.key(0), 100, 0.07)
+    assert int(mask.sum()) == 7
+
+
+def test_config_validator_agrees_with_engine():
+    """The cohort_tile divisibility check uses the engine's cohort_count:
+    tile=7 at (m=100, p=0.07) is valid (the old duplicated float ceil said
+    the cohort was 8 and rejected it); a genuine mismatch still raises."""
+    FederatedConfig(algorithm="gpdmm", num_clients=100, participation=0.07,
+                    cohort_tile=7)
+    with pytest.raises(ValueError, match="divide"):
+        FederatedConfig(algorithm="gpdmm", num_clients=100,
+                        participation=0.07, cohort_tile=3)
+
+
+def test_log_every_zero_does_not_crash():
+    """--log-every 0 used to ZeroDivisionError on the per-round driver
+    (the scan path survived); both drivers now clamp and log every round."""
+    for rpc, want in ((1, [1, 2]), (2, [2])):
+        # the scan driver can't log inside a dispatch, so rpc=2 only
+        # surfaces the final round; the per-round driver logs every round
+        hist = train_run("olmo-1b", reduced=True, steps=2, algorithm="gpdmm",
+                         k=1, eta=0.05, m=2, per_client_batch=2, seq_len=32,
+                         log_every=0, rounds_per_call=rpc)
+        assert [r["round"] for r in hist] == want
+
+
+def test_round_alignment_r1_vs_scan():
+    """The per-round and round-batched drivers log the SAME round numbers
+    (loss curves line up row for row): steps=6, log_every=2 -> [2, 4, 6]."""
+    kw = dict(reduced=True, steps=6, algorithm="gpdmm", k=1, eta=0.05, m=2,
+              per_client_batch=2, seq_len=32, log_every=2)
+    h1 = train_run("olmo-1b", rounds_per_call=1, **kw)
+    h2 = train_run("olmo-1b", rounds_per_call=2, **kw)
+    assert [r["round"] for r in h1] == [2, 4, 6]
+    assert [r["round"] for r in h1] == [r["round"] for r in h2]
+    for a, b in zip(h1, h2):
+        assert a["server_loss"] == pytest.approx(b["server_loss"], abs=1e-5)
+
+
+def test_final_checkpoint_respects_keep(tmp_path):
+    """The end-of-run save passes keep=ckpt_keep too: it must prune old
+    anchors instead of leaving keep+1 files behind."""
+    train_run("olmo-1b", reduced=True, steps=4, algorithm="gpdmm", k=1,
+              eta=0.05, m=2, per_client_batch=2, seq_len=32, log_every=1,
+              ckpt_dir=str(tmp_path), ckpt_every=1, ckpt_keep=2)
+    steps = ckpt.steps(tmp_path)
+    assert len(steps) <= 2, steps
+    assert steps[-1] == 4  # the final state is among the survivors
+
+
+def test_ckpt_steps_skips_stray_files(tmp_path):
+    train_run("olmo-1b", reduced=True, steps=2, algorithm="gpdmm", k=1,
+              eta=0.05, m=2, per_client_batch=2, seq_len=32, log_every=1,
+              ckpt_dir=str(tmp_path))
+    (tmp_path / "step_tmp.msgpack").write_bytes(b"not a checkpoint")
+    with pytest.warns(RuntimeWarning, match="non-checkpoint"):
+        steps = ckpt.steps(tmp_path)
+    assert steps == [2]
+    # and --resume still works with the stray file present
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        back = ckpt.load(tmp_path)
+    assert back["round"] == 2
