@@ -484,6 +484,54 @@ def bench_popsweep(K: int = 4):
     return records
 
 
+# ISSUE 9: telemetry-on overhead.  The same popstore round as the gated
+# (lm_flat, gpdmm, partial, popstore) cell, but with the global span tracer
+# live (popstore emits its phase spans + ring counter into a real trace
+# file).  Keys as path=popstore_telemetry: a FRESH-ONLY cell the regression
+# gate reports but never fails on -- the gate's telemetry-off cells are the
+# proof the off path stayed free; this cell prices the ON path.
+def bench_telemetry(K: int = 4):
+    import tempfile
+
+    from repro.telemetry import spans as tel_spans
+
+    jax.clear_caches()
+    spec = PROBLEMS["lm_flat"]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    n = sum(int(jnp.size(v)) for v in params.values())
+    batch = {"dummy": jnp.zeros((m, 1))}
+    cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=0.1,
+                          use_arena=True, participation=0.5, cohort=True,
+                          popstore=True, popstore_min_clients=1)
+    runner = popstore.Runner(cfg, _native_grad)
+    state = runner.init(jax.tree.map(jnp.copy, params), m)
+    us_off = _time_host_round(runner, state, batch)
+
+    tracer = tel_spans.get_tracer()
+    was = tracer.enabled
+    with tempfile.TemporaryDirectory() as td:
+        tracer.configure(enabled=True, trace_out=f"{td}/bench_trace.json")
+        try:
+            us_on = _time_host_round(runner, state, batch)
+            tracer.flush()
+        finally:
+            tracer.close()
+            tracer.configure(enabled=was)
+    mc = cohort_count(m, 0.5)
+    rec = _record("lm_flat", "gpdmm", "partial", "popstore_telemetry",
+                  "native", "per_round", m, n, K, us_on,
+                  cohort_round_passes(K, m, mc))
+    rec["participation"] = 0.5
+    rec["m_active"] = mc
+    rec["us_per_round_off"] = round(us_off, 1)
+    rec["overhead_pct"] = round(100.0 * (us_on - us_off) / us_off, 2)
+    print(f"  -> lm_flat/gpdmm/partial popstore_telemetry: {us_on:.0f} "
+          f"us/round tracing vs {us_off:.0f} off "
+          f"({rec['overhead_pct']:+.1f}%)")
+    return [rec]
+
+
 # ISSUE 4: decentralized graph-PDMM rows -- ring vs star vs complete at the
 # LM-scale flat shape.  One graph round = (per firing phase) the fused
 # neighbor reduce over the (2E, width) edge-dual arena, the K-step inner
@@ -712,6 +760,7 @@ def run(out_path: str = "BENCH_round.json"):
                 trajectory.extend(bench_round(problem, algo, variant))
     trajectory.extend(bench_cohort())
     trajectory.extend(bench_popsweep())
+    trajectory.extend(bench_telemetry())
     trajectory.extend(bench_topology())
     trajectory.extend(bench_screen())
     trajectory.extend(bench_stale())
@@ -732,6 +781,14 @@ def run(out_path: str = "BENCH_round.json"):
                 "cohort layout pays).  Sweep cells whose host store would "
                 "not fit in available memory are SKIPPED with a printed "
                 "notice (never silently).",
+        "telemetry_note": "the path=popstore_telemetry row (ISSUE 9) "
+                "re-times the gated popstore cell with the global span "
+                "tracer LIVE (phase spans + the ring counter written to a "
+                "real trace file); us_per_round_off / overhead_pct record "
+                "the paired telemetry-off timing from the same process.  "
+                "Fresh-only: the gate's own cells all run telemetry-off, "
+                "which is the regression proof that the disabled path adds "
+                "no per-round host work.",
         "stale_note": "stale_mix rows (ISSUE 7) time the fused bounded-"
                 "staleness admission kernel alone -- ONE pass over the "
                 "uplink/cache/stale-buffer arenas (3r + 2w) emitting the "

@@ -59,6 +59,7 @@ from repro.core import agpdmm, arena, fedavg, gpdmm, scaffold
 from repro.core import tree_util as T
 from repro.core.api import resolved_rho, use_cohort
 from repro.core.gpdmm import participation_key
+from repro.telemetry import spans as _spans
 
 _BODY_FACTORY = {
     "gpdmm": gpdmm.popstore_body,
@@ -135,6 +136,11 @@ class Runner:
         self._body = None
         self._idx_fn = None
         self._next: Optional[_Staged] = None
+        # prefetch-ring accounting, emitted as trace counter events when the
+        # global tracer is on (docs/telemetry.md) -- a miss means the round
+        # paid the host gather on the critical path
+        self.ring_hits = 0
+        self.ring_misses = 0
 
     # -- build ------------------------------------------------------------
 
@@ -242,46 +248,67 @@ class Runner:
         r = int(state["round"])
         store = state["pop"]
 
-        staged = self._take_prefetch(r, store) or self._stage_host(r, store)
+        # telemetry (docs/telemetry.md): every phase below is a span on the
+        # global tracer; all of it is the shared no-op singleton when
+        # tracing is off, so the telemetry-off round does no added host work
+        tr = _spans.get_tracer()
+        staged = self._take_prefetch(r, store)
+        if staged is None:
+            # ring miss: the host gather lands on the critical path
+            self.ring_misses += 1
+            with tr.span("popstore/host_gather", {"round": r}):
+                staged = self._stage_host(r, store)
+        else:
+            self.ring_hits += 1
+        if tr.enabled:
+            tr.counter("popstore/ring",
+                       {"hit": self.ring_hits, "miss": self.ring_misses})
         if staged.dev_rows is None:
-            staged.dev_rows = {k: jax.device_put(v)
-                               for k, v in staged.host_rows.items()}
+            with tr.span("popstore/h2d_stage", {"round": r}):
+                staged.dev_rows = {k: jax.device_put(v)
+                                   for k, v in staged.host_rows.items()}
         server = {"x_s": state["x_s"]}
         if self.algo == "scaffold":
             server["c"] = state["c"]
         # async dispatch: the device crunches while the host prefetches
-        rows_out, server_rows, dev_metrics = self._body(
-            server, staged.dev_rows, staged.idx_dev, jnp.int32(r), batch)
+        with tr.span("popstore/device_round", {"round": r}):
+            rows_out, server_rows, dev_metrics = self._body(
+                server, staged.dev_rows, staged.idx_dev, jnp.int32(r), batch)
 
         # prefetch ring: round r+1's cohort is already determined, so gather
         # its rows NOW, overlapping the device compute above.  Rows round r
         # is about to update are reconciled below, after the scatter.
-        nxt = self._stage_host(r + 1, store)
+        with tr.span("popstore/prefetch_gather", {"round": r + 1}):
+            nxt = self._stage_host(r + 1, store)
 
-        new_rows = {k: np.asarray(v) for k, v in rows_out.items()}  # sync
+        with tr.span("popstore/device_sync", {"round": r}):
+            new_rows = {k: np.asarray(v) for k, v in rows_out.items()}  # sync
         idx_np = staged.idx_np
 
-        # incremental server sum BEFORE the scatter (needs the old rows)
-        sum_name = self.mean_buffer or self.buffers[0]
-        delta = (new_rows[sum_name].astype(np.float64).sum(axis=0)
-                 - store[sum_name][idx_np].astype(np.float64).sum(axis=0))
-        # Kahan-compensated accumulation: the per-round delta is tiny next
-        # to the population sum at large m, exactly where naive f64 += leaks
-        y = delta - state["pop_sum_comp"]
-        t = state["pop_sum"] + y
-        comp_new = (t - state["pop_sum"]) - y
-        sum_new = t
+        with tr.span("popstore/scatter_back", {"round": r}):
+            # incremental server sum BEFORE the scatter (needs the old rows)
+            sum_name = self.mean_buffer or self.buffers[0]
+            delta = (new_rows[sum_name].astype(np.float64).sum(axis=0)
+                     - store[sum_name][idx_np].astype(np.float64).sum(axis=0))
+            # Kahan-compensated accumulation: the per-round delta is tiny next
+            # to the population sum at large m, exactly where naive f64 += leaks
+            y = delta - state["pop_sum_comp"]
+            t = state["pop_sum"] + y
+            comp_new = (t - state["pop_sum"]) - y
+            sum_new = t
 
-        for name in self.buffers:
-            store[name][idx_np] = new_rows[name]
+            for name in self.buffers:
+                store[name][idx_np] = new_rows[name]
 
-        # reconcile the prefetched slot with the rows just scattered
-        common, pos_next, _ = np.intersect1d(nxt.idx_np, idx_np,
-                                             return_indices=True)
-        if common.size:
-            for name, buf in nxt.host_rows.items():
-                buf[pos_next] = store[name][common]
-        nxt.dev_rows = {k: jax.device_put(v) for k, v in nxt.host_rows.items()}
+            # reconcile the prefetched slot with the rows just scattered
+            common, pos_next, _ = np.intersect1d(nxt.idx_np, idx_np,
+                                                 return_indices=True)
+            if common.size:
+                for name, buf in nxt.host_rows.items():
+                    buf[pos_next] = store[name][common]
+        with tr.span("popstore/h2d_stage", {"round": r + 1, "prefetch": True}):
+            nxt.dev_rows = {k: jax.device_put(v)
+                            for k, v in nxt.host_rows.items()}
         self._next = nxt
 
         new_state = {

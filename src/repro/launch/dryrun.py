@@ -42,7 +42,9 @@ def run_one(arch_name: str, shape_name: str, *, multi_pod: bool, verbose: bool =
         }
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    # monotonic clock: wall-clock time.time can step under NTP and skew
+    # the lower/compile durations the reports record
+    t0 = time.perf_counter()
     bundle = build_step(cfg, shape, mesh)
     with mesh_context(mesh):
         jitted = jax.jit(
@@ -52,9 +54,9 @@ def run_one(arch_name: str, shape_name: str, *, multi_pod: bool, verbose: bool =
             donate_argnums=bundle.donate_argnums,
         )
         lowered = jitted.lower(*bundle.args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     flops, bytes_acc = hlo_stats.flops_and_bytes(compiled)
     mem = hlo_stats.memory_stats(compiled)

@@ -15,6 +15,7 @@ import argparse
 import dataclasses
 import json
 import pathlib
+import time
 
 import jax
 
@@ -44,6 +45,9 @@ def _parse_val(v: str):
 def measure(cfg, shape, *, multi_pod=False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = build_step(cfg, shape, mesh)
+    # monotonic perf_counter, not time.time: compile-time deltas between
+    # baseline and variant are part of the A/B report
+    t0 = time.perf_counter()
     with mesh_context(mesh):
         lowered = jax.jit(
             bundle.fn,
@@ -51,11 +55,15 @@ def measure(cfg, shape, *, multi_pod=False) -> dict:
             out_shardings=bundle.out_shardings,
             donate_argnums=bundle.donate_argnums,
         ).lower(*bundle.args)
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
     flops, bytes_acc = hlo_stats.flops_and_bytes(compiled)
     mem = hlo_stats.memory_stats(compiled)
     coll = hlo_stats.collective_bytes(compiled.as_text())
     return {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
         "hlo_flops_per_device": flops,
         "hlo_bytes_per_device": bytes_acc,
         "memory_peak_gib": mem["peak_bytes_est"] / 2**30,

@@ -15,6 +15,15 @@ parameter pytree, so steady-state query latency is unchanged.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
         --ckpt-dir /tmp/fedckpt --watch --duration 20
+
+Telemetry (ISSUE 9): ``--trace-out trace.json`` records poll / swap /
+prefill / decode spans per query batch (Perfetto-loadable);
+``--metrics-out metrics.jsonl`` streams per-query rows and the end-of-run
+summary; ``--prom-out serve.prom`` writes the final counters in the
+Prometheus textfile-collector format.  All timing below uses the monotonic
+``time.perf_counter`` -- wall-clock ``time.time`` can step under NTP and
+produce negative latencies; the only wall-clock stamp kept is the history
+rows' ``"t"`` field, which is a timestamp, not a duration.
 """
 from __future__ import annotations
 
@@ -25,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
+from repro import telemetry as tel
 from repro.configs import get_arch
 from repro.models import build as build_model
 
@@ -94,8 +104,35 @@ class HotSwapWatcher:
         return None
 
 
+def _tel_setup(telemetry: bool, trace_out, metrics_out):
+    """Shared launcher telemetry setup: returns (tel_on, tracer, registry,
+    sink, was_tracing).  The tracer is the process-global one so library
+    code (model, checkpoint) emits into the same trace."""
+    tel_on = telemetry or bool(trace_out) or bool(metrics_out)
+    tracer = tel.get_tracer()
+    was_tracing = tracer.enabled
+    if trace_out:
+        tracer.configure(enabled=True, trace_out=trace_out)
+    registry = tel.Registry() if tel_on else None
+    sink = tel.JsonlSink(metrics_out) if metrics_out else None
+    return tel_on, tracer, registry, sink, was_tracing
+
+
+def _tel_teardown(tracer, sink, trace_out, was_tracing):
+    if sink is not None:
+        sink.close()
+    if trace_out:
+        path = tracer.close()
+        if path:
+            print(f"[telemetry] trace written to {path} "
+                  f"(load in https://ui.perfetto.dev)", flush=True)
+        tracer.configure(enabled=was_tracing)
+
+
 def run(arch: str, *, reduced: bool = True, batch: int = 4, prompt_len: int = 64,
-        new_tokens: int = 16, seed: int = 0, greedy: bool = True):
+        new_tokens: int = 16, seed: int = 0, greedy: bool = True,
+        telemetry: bool = False, trace_out: str | None = None,
+        metrics_out: str | None = None, prom_out: str | None = None):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -115,10 +152,14 @@ def run(arch: str, *, reduced: bool = True, batch: int = 4, prompt_len: int = 64
     prefill = jax.jit(lambda p, bb: model.prefill(p, bb, prompt_len + new_tokens + cfg.n_prefix_tokens))
     decode = jax.jit(model.decode)
 
-    t0 = time.time()
-    logits, cache = prefill(params, b)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    tel_on, tracer, registry, sink, was_tracing = _tel_setup(
+        telemetry, trace_out, metrics_out)
+
+    t0 = time.perf_counter()
+    with tracer.span("serve/prefill", {"batch": batch, "prompt": prompt_len}):
+        logits, cache = prefill(params, b)
+        logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
 
     def pick(lg):
         if cfg.n_codebooks > 1:
@@ -127,18 +168,32 @@ def run(arch: str, *, reduced: bool = True, batch: int = 4, prompt_len: int = 64
         return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
 
     out_tokens = []
-    t0 = time.time()
-    for _ in range(new_tokens):
-        nxt = pick(logits)
-        logits, cache = decode(params, cache, nxt)
-        out_tokens.append(nxt)
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
+    t0 = time.perf_counter()
+    with tracer.span("serve/decode", {"new_tokens": new_tokens}):
+        for _ in range(new_tokens):
+            nxt = pick(logits)
+            logits, cache = decode(params, cache, nxt)
+            out_tokens.append(nxt)
+        jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
 
     gen = jnp.concatenate(out_tokens, axis=-1)
+    n_tok = int(gen.size)
     print(f"[serve] arch={arch} batch={batch} prompt={prompt_len} new={new_tokens}")
     print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode {t_decode/new_tokens*1e3:.2f} ms/token")
     print(f"[serve] sample generated ids: {jax.device_get(gen)[0][..., :8]}")
+    if tel_on:
+        registry.counter("serve/tokens").inc(n_tok)
+        registry.histogram("serve/prefill_s").observe(t_prefill)
+        registry.histogram("serve/decode_s").observe(t_decode)
+        registry.gauge("serve/tokens_per_s").set(
+            n_tok / t_decode if t_decode > 0 else 0.0)
+        if sink is not None:
+            sink.write({"kind": "summary", **registry.summary_row()})
+        if prom_out:
+            print(f"[telemetry] prometheus textfile -> "
+                  f"{tel.write_prometheus(registry, prom_out)}", flush=True)
+    _tel_teardown(tracer, sink, trace_out, was_tracing)
     return gen
 
 
@@ -147,7 +202,9 @@ def run_watch(arch: str, *, ckpt_dir: str, reduced: bool = True,
               seed: int = 0, poll_interval: float = 0.25,
               duration: float = 30.0, wait_first: float = 60.0,
               stop_when=None, retries: int = 3, backoff: float = 0.05,
-              history: list | None = None):
+              history: list | None = None,
+              telemetry: bool = False, trace_out: str | None = None,
+              metrics_out: str | None = None, prom_out: str | None = None):
     """Serve queries continuously while a trainer writes checkpoints.
 
     Blocks until the FIRST loadable checkpoint appears (``wait_first``
@@ -165,11 +222,17 @@ def run_watch(arch: str, *, ckpt_dir: str, reduced: bool = True,
     model = build_model(cfg)
     key = jax.random.key(seed)
 
+    tel_on, tracer, registry, sink, was_tracing = _tel_setup(
+        telemetry, trace_out, metrics_out)
+    # swap/rejection counters are kept even with telemetry off -- the
+    # end-of-run structured summary always prints them
+    registry = registry or tel.Registry()
+
     watcher = HotSwapWatcher(ckpt_dir, retries=retries, backoff=backoff)
-    t_first = time.time()
+    t_first = time.perf_counter()
     payload = watcher.poll()
     while payload is None:
-        if time.time() - t_first > wait_first:
+        if time.perf_counter() - t_first > wait_first:
             raise TimeoutError(
                 f"no loadable checkpoint appeared under {ckpt_dir} within "
                 f"{wait_first:.0f}s")
@@ -201,34 +264,72 @@ def run_watch(arch: str, *, ckpt_dir: str, reduced: bool = True,
         return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
 
     def query(p):
-        logits, cache = prefill(p, b)
+        with tracer.span("serve/prefill", {"step": watcher.step}):
+            logits, cache = prefill(p, b)
+            if tracer.enabled:  # sync only when traced: keeps the span honest
+                jax.block_until_ready(logits)
         n = 0
-        for _ in range(new_tokens):
-            nxt = pick(logits)
-            logits, cache = decode(p, cache, nxt)
-            n += int(nxt.size)
-        jax.block_until_ready(logits)
+        with tracer.span("serve/decode", {"new_tokens": new_tokens}):
+            for _ in range(new_tokens):
+                nxt = pick(logits)
+                logits, cache = decode(p, cache, nxt)
+                n += int(nxt.size)
+            jax.block_until_ready(logits)
         return n
 
     history = [] if history is None else history
-    t_end = time.time() + duration
+    t_end = time.perf_counter() + duration
     while True:
-        fresh = watcher.poll()
+        t_poll = time.perf_counter()
+        with tracer.span("serve/poll"):
+            fresh = watcher.poll()
         if fresh is not None:
+            swap_s = time.perf_counter() - t_poll
             payload, params = fresh, fresh["server"]
+            registry.histogram("serve/swap_latency_s").observe(swap_s)
+            tracer.instant("serve/swap", {"step": watcher.step,
+                                          "round": int(payload["round"]),
+                                          "latency_s": swap_s})
             print(f"[serve] hot-swapped to step {watcher.step} "
                   f"(round {int(payload['round'])})", flush=True)
+        t_q = time.perf_counter()
         n_tok = query(params)
-        history.append({"t": time.time(), "step": watcher.step,
-                        "round": int(payload["round"]), "tokens": n_tok})
+        q_s = time.perf_counter() - t_q
+        registry.counter("serve/tokens").inc(n_tok)
+        registry.histogram("serve/query_s").observe(q_s)
+        row = {"t": time.time(), "step": watcher.step,
+               "round": int(payload["round"]), "tokens": n_tok}
+        history.append(row)
+        if sink is not None:
+            sink.write({"kind": "query", "query_s": q_s, **row})
+        tracer.flush()
         if stop_when is not None and stop_when():
             break
-        if time.time() >= t_end:
+        if time.perf_counter() >= t_end:
             break
         time.sleep(poll_interval)
     served = sorted({row["step"] for row in history})
+    registry.counter("serve/swaps").inc(watcher.swaps)
+    registry.counter("serve/rejections").inc(watcher.failures)
+    q_hist = registry.histogram("serve/query_s")
+    swap_hist = registry.histogram("serve/swap_latency_s")
+    tok_total = registry.counter("serve/tokens").value
+    tokens_per_s = tok_total / q_hist.total if q_hist.total > 0 else 0.0
+    registry.gauge("serve/tokens_per_s").set(tokens_per_s)
     print(f"[serve] {len(history)} query batches; served steps {served}; "
           f"swaps={watcher.swaps} rejected={watcher.failures}", flush=True)
+    mean_swap = ("n/a" if swap_hist.count == 0
+                 else f"{swap_hist.mean * 1e3:.1f} ms")
+    print(f"[serve] summary: tokens={int(tok_total)} "
+          f"tokens_per_s={tokens_per_s:.1f} "
+          f"mean_query={q_hist.mean * 1e3:.1f} ms "
+          f"mean_swap_latency={mean_swap}", flush=True)
+    if sink is not None:
+        sink.write({"kind": "summary", **registry.summary_row()})
+    if prom_out:
+        print(f"[telemetry] prometheus textfile -> "
+              f"{tel.write_prometheus(registry, prom_out)}", flush=True)
+    _tel_teardown(tracer, sink, trace_out, was_tracing)
     return history, watcher
 
 
@@ -252,7 +353,18 @@ def main():
                     help="watch mode: serve for this many seconds")
     ap.add_argument("--wait-first", type=float, default=60.0,
                     help="watch mode: seconds to wait for the first anchor")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the metrics registry even without sinks")
+    ap.add_argument("--trace-out", default=None,
+                    help="write poll/swap/prefill/decode spans as Chrome "
+                         "trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream per-query rows + summary as JSONL")
+    ap.add_argument("--prom-out", default=None,
+                    help="write final counters as a Prometheus textfile")
     args = ap.parse_args()
+    tel_kw = dict(telemetry=args.telemetry, trace_out=args.trace_out,
+                  metrics_out=args.metrics_out, prom_out=args.prom_out)
     if args.watch:
         if not args.ckpt_dir:
             raise SystemExit("--watch needs --ckpt-dir")
@@ -260,10 +372,10 @@ def main():
                   batch=args.batch, prompt_len=args.prompt_len,
                   new_tokens=args.new_tokens,
                   poll_interval=args.poll_interval, duration=args.duration,
-                  wait_first=args.wait_first)
+                  wait_first=args.wait_first, **tel_kw)
     else:
         run(args.arch, reduced=args.reduced, batch=args.batch,
-            prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens, **tel_kw)
 
 
 if __name__ == "__main__":

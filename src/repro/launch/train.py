@@ -26,6 +26,19 @@ state back to the newest healthy checkpoint anchor and retries with the
 stepsize scaled by ``--eta-backoff``.  The fault trace is a pure function
 of (fault seed, round, client), so replayed rounds replay identical faults:
 screening remedies corruption, the watchdog remedies stepsize divergence.
+
+Telemetry (docs/telemetry.md): ``--telemetry`` turns on the metrics
+registry (fault/rollback counters, loss/residual gauges) with a structured
+end-of-run summary; ``--trace-out trace.json`` additionally records
+round-phase spans (batch build / dispatch / block_until_ready / eval+log /
+checkpoint save+load, plus the popstore staging phases and watchdog
+strike/rollback instants) as Perfetto-loadable Chrome trace JSON;
+``--metrics-out metrics.jsonl`` streams every logged history row through
+the crash-safe JSONL sink as it happens, so loss curves survive a crash
+instead of living only in stdout; ``--profile-rounds A:B`` captures a
+``jax.profiler`` device trace for exactly those rounds.  All of it is off
+by default, and the off path adds no per-round host work (the dispatch
+wrappers are only installed when tracing is on).
 """
 from __future__ import annotations
 
@@ -33,6 +46,7 @@ import argparse
 import dataclasses
 import json
 import math
+import os
 import pathlib
 import time
 from functools import partial
@@ -41,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
+from repro import telemetry as tel
 from repro.configs import get_arch
 from repro.configs.base import FaultConfig, FederatedConfig, ShapeConfig
 from repro.core import make as make_fed
@@ -86,6 +101,11 @@ def run(
     ckpt_keep: int = 3,
     expect_demotions: int = 0,
     expect_rollbacks: int = 0,
+    telemetry: bool = False,
+    trace_out: str | None = None,
+    metrics_out: str | None = None,
+    profile_rounds: str | None = None,
+    profile_dir: str | None = None,
 ):
     cfg = get_arch(arch)
     if reduced:
@@ -93,6 +113,23 @@ def run(
     fault_cfg = FaultConfig.parse(faults) if isinstance(faults, str) else faults
     if watchdog and not ckpt_dir:
         raise ValueError("--watchdog needs --ckpt-dir (rollback anchors)")
+
+    # telemetry: any output flag implies the master switch; the tracer only
+    # records when it has a sink (spans without a file are dead weight).
+    # The GLOBAL tracer is configured so the instrumented library paths
+    # (core.popstore staging, serve's watcher) emit into the same trace.
+    tel_on = (telemetry or bool(trace_out) or bool(metrics_out)
+              or bool(profile_rounds))
+    tracer = tel.get_tracer()
+    was_tracing = tracer.enabled
+    if trace_out:
+        tracer.configure(enabled=True, trace_out=trace_out)
+    registry = tel.Registry() if tel_on else None
+    sink = tel.JsonlSink(metrics_out) if metrics_out else None
+    prof = tel.RoundProfiler.parse(
+        profile_rounds,
+        profile_dir or (str(pathlib.Path(trace_out).parent / "jaxprof")
+                        if trace_out else "telemetry/jaxprof"))
 
     def fed_cfg(scale: float) -> FederatedConfig:
         # eta backoff after a rollback re-derives rho = 1/(K eta') too: the
@@ -159,7 +196,8 @@ def run(
         watchdog rollback both degrade to the last good anchor."""
         for step_n in sorted(ckpt.steps(ckpt_dir), reverse=True):
             try:
-                return step_n, ckpt.load(ckpt_dir, step_n)
+                with tracer.span("ckpt/load", {"step": step_n}):
+                    return step_n, ckpt.load(ckpt_dir, step_n)
             except ValueError as e:
                 print(f"[train] {what}: SKIPPING unreadable checkpoint step "
                       f"{step_n}: {e}", flush=True)
@@ -229,6 +267,24 @@ def run(
               f"{rounds_per_call} -> 1 (host-side round driver)")
         R = 1
 
+    def _instrument(fn):
+        """Dispatch/sync spans around a round function.  Installed ONLY when
+        tracing is on: the telemetry-off path keeps the original callable
+        (and its async-dispatch overlap) with zero added per-round host
+        work.  The explicit block_until_ready span is what splits "enqueue
+        the round" from "wait for the device" in the trace."""
+        if not tracer.enabled:
+            return fn
+
+        def wrapped(s, b):
+            with tracer.span("round/dispatch"):
+                out = fn(s, b)
+            with tracer.span("round/block_until_ready"):
+                jax.block_until_ready(out)
+            return out
+
+        return wrapped
+
     def build(scale: float):
         """(fed, step_fn, round_fn) at the given eta scale -- rebuilt after
         every watchdog backoff so the jitted round sees the new stepsize."""
@@ -240,7 +296,8 @@ def run(
             fed = FedOpt(name=algorithm, init=runner.init,
                          round=runner.round,
                          server_params=runner.server_params)
-            return fed, runner.round, runner.round
+            rf = _instrument(runner.round)
+            return fed, rf, rf
         fed = make_fed(fed_cfg(scale))
         round_fn = jax.jit(lambda s, b: fed.round(s, client_grad, b),
                            donate_argnums=(0,))
@@ -250,7 +307,7 @@ def run(
                               donate_argnums=(0,))
         else:
             step_fn = round_fn
-        return fed, step_fn, round_fn
+        return fed, _instrument(step_fn), _instrument(round_fn)
 
     @jax.jit
     def eval_loss(params, batch):
@@ -304,6 +361,12 @@ def run(
                    or row["server_loss"] > watchdog_factor * self.best)
             if bad:
                 self.strikes += 1
+                tracer.instant("watchdog/strike",
+                               {"round": row["round"],
+                                "strikes": self.strikes,
+                                "server_loss": row["server_loss"]})
+                if registry is not None:
+                    registry.counter("watchdog_strikes").inc()
             else:
                 self.strikes = 0
                 self.best = min(self.best, row["server_loss"])
@@ -320,30 +383,79 @@ def run(
         if metrics and "faults_demoted" in metrics:
             injected_total += float(jnp.sum(jnp.asarray(metrics["faults_injected"])))
             demoted_total += float(jnp.sum(jnp.asarray(metrics["faults_demoted"])))
+        if registry is not None and metrics:
+            # counter-semantic device metrics sum over EVERY dispatch, so
+            # the registry totals match the launcher's own accounting (the
+            # --expect-demotions gate) exactly -- logged rows alone would
+            # miss unlogged rounds and all but the last stacked scan row
+            for key in tel.COUNTER_KEYS:
+                if key in metrics:
+                    v = float(jnp.sum(jnp.asarray(metrics[key])))
+                    if math.isfinite(v):
+                        registry.counter(key).inc(v)
 
     def save_anchor(fed, state, scale):
         done = int(state["round"])
-        ckpt.save(ckpt_dir, done, {
-            "server": fed.server_params(state),
-            "fed_state": state,
-            "round": done,
-            "config": run_config,
-            "eta_scale": scale,
-        }, keep=ckpt_keep)
+        with tracer.span("ckpt/save", {"round": done}):
+            t0 = time.perf_counter()
+            path = ckpt.save(ckpt_dir, done, {
+                "server": fed.server_params(state),
+                "fed_state": state,
+                "round": done,
+                "config": run_config,
+                "eta_scale": scale,
+            }, keep=ckpt_keep)
+            dt = time.perf_counter() - t0
+        if registry is not None:
+            registry.counter("ckpt_saves").inc()
+            registry.counter("ckpt_bytes").inc(os.path.getsize(path))
+            registry.histogram("ckpt_save_s").observe(dt)
         return done
+
+    def traced_batches(it):
+        """Wrap the batch stream so each ``next`` is a round/batch_build
+        span.  Only installed when tracing -- the off path iterates the
+        original generator untouched."""
+        if not tracer.enabled:
+            return it
+
+        def gen():
+            src = iter(it)
+            while True:
+                with tracer.span("round/batch_build"):
+                    try:
+                        b = next(src)
+                    except StopIteration:
+                        return
+                yield b
+
+        return gen()
 
     def attempt(fed, step_fn, round_fn, state, from_round, scale, wd):
         """One trajectory attempt from ``from_round``; returns
         ``(state, "done" | "diverged")``."""
         nonlocal last_saved
-        data = make_data(from_round)
+        data = traced_batches(make_data(from_round))
 
         def log_round(i, state, metrics, eb):
             nonlocal last_saved
-            row = {"round": i,
-                   "server_loss": float(eval_loss(fed.server_params(state), eb)),
-                   **(metrics_row(metrics) if metrics is not None else {})}
+            with tracer.span("round/eval_log", {"round": i}):
+                row = {"round": i,
+                       "server_loss": float(eval_loss(fed.server_params(state), eb)),
+                       **(metrics_row(metrics) if metrics is not None else {})}
             history.append(row)
+            if sink is not None:
+                # incremental: each logged row is flushed as it happens, so
+                # the loss curve survives a crash (read_jsonl tolerates the
+                # torn final line a mid-write kill leaves)
+                sink.write({"kind": "round", **row})
+            if registry is not None:
+                # counters=(): logged rows carry LAST-dispatch values, so
+                # they feed gauges/histograms only; the exact counter totals
+                # come from note_faults, which sees every executed dispatch
+                # (stacked scan rows and unlogged rounds included)
+                registry.absorb(row, counters=())
+            tracer.flush()
             print(f"[train] {json.dumps(row)}", flush=True)
             diverged = wd.note(row) if wd is not None else False
             healthy = (math.isfinite(row["server_loss"])
@@ -366,11 +478,19 @@ def run(
                 last = batch
                 if len(pending) < R:
                     continue
-                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *pending)
+                with tracer.span("round/batch_stack", {"R": R}):
+                    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *pending)
                 pending = []
+                if prof is not None:
+                    # the scan dispatch is all-or-nothing: capture covers
+                    # every R-round block intersecting the window
+                    prof.before_round(i + 1)
                 state, metrics = step_fn(state, stacked)  # metrics stacked (R,)
                 note_faults(metrics)
                 i += R
+                if prof is not None:
+                    jax.block_until_ready(state)
+                    prof.after_round(i)
                 if (i - R) // max(1, log_every) != i // max(1, log_every):
                     eb = eval_batch if eval_batch is not None else last
                     if log_round(i, state, metrics, eb):
@@ -392,7 +512,14 @@ def run(
         # ``max(1, log_every)`` matches it too (--log-every 0 used to
         # ZeroDivisionError here while the scan path survived)
         for i, batch in enumerate(data, start=from_round + 1):
+            if prof is not None:
+                prof.before_round(i)
             state, metrics = step_fn(state, batch)
+            if prof is not None:
+                # the capture window must hold COMPLETE rounds: force the
+                # async dispatch to finish before deciding to stop
+                jax.block_until_ready(state)
+                prof.after_round(i)
             note_faults(metrics)
             if (i - 1) // max(1, log_every) != i // max(1, log_every) or i == steps:
                 eb = eval_batch if eval_batch is not None else batch
@@ -400,7 +527,7 @@ def run(
                     return state, "diverged"
         return state, "done"
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     rollbacks = 0
     wd = _Watchdog() if watchdog else None
     fed, step_fn, round_fn = build(eta_scale)
@@ -410,47 +537,69 @@ def run(
         # round-start anchor: the very first divergence has somewhere to
         # roll back to
         last_saved = save_anchor(fed, state, eta_scale)
-    while True:
-        state, status = attempt(fed, step_fn, round_fn, state, start,
-                                eta_scale, wd)
-        if status == "done":
-            break
-        rollbacks += 1
-        if rollbacks > max_rollbacks:
-            raise RuntimeError(
-                f"divergence watchdog: {rollbacks} rollbacks exceeded "
-                f"max_rollbacks={max_rollbacks} (eta_scale={eta_scale:g}); "
-                f"the run does not converge at any tried stepsize")
-        _anchor, payload = load_latest_good("watchdog rollback")
-        state = payload["fed_state"]
-        start = int(payload["round"])
-        eta_scale *= eta_backoff
-        wd = _Watchdog()
-        print(f"[train] watchdog: diverged; rolled back to round {start}, "
-              f"eta_scale -> {eta_scale:g}", flush=True)
-        fed, step_fn, round_fn = build(eta_scale)
-    dt = time.time() - t0
-    print(f"[train] {n_rounds} rounds (K={k}, m={m}) in {dt:.1f}s; algo={algorithm}, "
-          f"rounds_per_call={R}" + (", cohort batches" if cohort else ""))
+    try:
+        while True:
+            state, status = attempt(fed, step_fn, round_fn, state, start,
+                                    eta_scale, wd)
+            if status == "done":
+                break
+            rollbacks += 1
+            if rollbacks > max_rollbacks:
+                raise RuntimeError(
+                    f"divergence watchdog: {rollbacks} rollbacks exceeded "
+                    f"max_rollbacks={max_rollbacks} (eta_scale={eta_scale:g}); "
+                    f"the run does not converge at any tried stepsize")
+            _anchor, payload = load_latest_good("watchdog rollback")
+            state = payload["fed_state"]
+            start = int(payload["round"])
+            eta_scale *= eta_backoff
+            wd = _Watchdog()
+            tracer.instant("watchdog/rollback",
+                           {"to_round": start, "eta_scale": eta_scale,
+                            "rollbacks": rollbacks})
+            if registry is not None:
+                registry.counter("rollbacks").inc()
+            print(f"[train] watchdog: diverged; rolled back to round {start}, "
+                  f"eta_scale -> {eta_scale:g}", flush=True)
+            fed, step_fn, round_fn = build(eta_scale)
+        dt = time.perf_counter() - t0
+        print(f"[train] {n_rounds} rounds (K={k}, m={m}) in {dt:.1f}s; algo={algorithm}, "
+              f"rounds_per_call={R}" + (", cohort batches" if cohort else ""))
 
-    if ckpt_dir:
-        # the FULL fed state (arena buffers, server pytree, round counter),
-        # not just server params: `load` + --resume continues the exact
-        # trajectory.  "server" stays for serve-side consumers.
-        done = int(state["round"])
-        ckpt.save(ckpt_dir, done, {
-            "server": fed.server_params(state),
-            "fed_state": state,
-            "round": done,
-            "config": run_config,
-            "eta_scale": eta_scale,
-        }, keep=ckpt_keep)  # retention applies to the final save too, not
-        # just the periodic anchors -- a finished run keeps exactly ckpt_keep
-        print(f"[train] full-state checkpoint (round {done}) saved to {ckpt_dir}")
-    if fault_cfg is not None or watchdog:
-        print(f"[train] robustness: faults_injected={injected_total:.0f} "
-              f"demoted={demoted_total:.0f} rollbacks={rollbacks} "
-              f"eta_scale={eta_scale:g}")
+        if ckpt_dir:
+            # the FULL fed state (arena buffers, server pytree, round counter),
+            # not just server params: `load` + --resume continues the exact
+            # trajectory.  "server" stays for serve-side consumers.
+            done = int(state["round"])
+            save_anchor(fed, state, eta_scale)
+            # retention applies to the final save too, not just the periodic
+            # anchors -- a finished run keeps exactly ckpt_keep
+            print(f"[train] full-state checkpoint (round {done}) saved to {ckpt_dir}")
+        if fault_cfg is not None or watchdog:
+            print(f"[train] robustness: faults_injected={injected_total:.0f} "
+                  f"demoted={demoted_total:.0f} rollbacks={rollbacks} "
+                  f"eta_scale={eta_scale:g}")
+    finally:
+        # telemetry teardown runs on the crash path too: every flushed span
+        # and JSONL row survives, and the summary row records the totals up
+        # to the failure (the sinks are exactly for post-mortems)
+        if prof is not None:
+            prof.close()
+        if registry is not None:
+            registry.gauge("eta_scale").set(eta_scale)
+        if sink is not None:
+            sink.write({"kind": "summary", **registry.summary_row()})
+            sink.close()
+        if tel_on:
+            print(f"[train] telemetry: "
+                  f"{json.dumps(registry.summary_row(), default=float)}",
+                  flush=True)
+        if trace_out:
+            trace_path = tracer.close()
+            if trace_path:
+                print(f"[train] trace written to {trace_path} "
+                      f"(load in https://ui.perfetto.dev)", flush=True)
+            tracer.configure(enabled=was_tracing)
     if expect_demotions and demoted_total < expect_demotions:
         raise RuntimeError(
             f"expected >= {expect_demotions} screened demotions, "
@@ -531,6 +680,22 @@ def main():
                     help="fail unless >= N uplinks were demoted (chaos CI gate)")
     ap.add_argument("--expect-rollbacks", type=int, default=0,
                     help="fail unless >= N rollbacks happened (chaos CI gate)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="metrics registry + structured end-of-run summary "
+                         "(implied by any of the output flags below)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write round-phase spans as Chrome trace-event JSON "
+                         "(open in Perfetto); enables the span tracer")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream every logged history row + an end-of-run "
+                         "summary to this JSONL file (crash-safe, one flush "
+                         "per row)")
+    ap.add_argument("--profile-rounds", default=None,
+                    help="capture a jax.profiler device trace for exactly "
+                         "rounds A:B (e.g. '3:5'; see docs/telemetry.md)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="jax.profiler output dir (default: next to "
+                         "--trace-out, else ./telemetry/jaxprof)")
     args = ap.parse_args()
     run(
         args.arch, reduced=args.reduced, steps=args.steps, algorithm=args.algorithm,
@@ -549,6 +714,9 @@ def main():
         max_rollbacks=args.max_rollbacks, ckpt_every=args.ckpt_every,
         ckpt_keep=args.ckpt_keep, expect_demotions=args.expect_demotions,
         expect_rollbacks=args.expect_rollbacks,
+        telemetry=args.telemetry, trace_out=args.trace_out,
+        metrics_out=args.metrics_out, profile_rounds=args.profile_rounds,
+        profile_dir=args.profile_dir,
     )
 
 

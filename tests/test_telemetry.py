@@ -1,0 +1,247 @@
+"""ISSUE 9: the telemetry subsystem -- span tracing, the metrics registry,
+and the sinks.
+
+Contracts pinned here:
+
+  * span nesting and ordering survive into valid Chrome trace-event JSON
+    (plain ``json.load``-able once closed; Perfetto wants exactly this);
+  * a DISABLED tracer is a true no-op: per-span allocations do not scale
+    with call count (the ``_NULL_SPAN`` singleton / fixed-arity
+    ``__exit__`` design);
+  * the registry's counter totals from a short FAULTED train run equal the
+    hand-computed sum over the per-round rows the same run streamed to the
+    JSONL sink -- i.e. the registry matches the launcher's own
+    ``--expect-demotions`` accounting rather than double- or
+    under-counting;
+  * the JSONL sink tolerates a crash-torn final line but refuses mid-file
+    corruption; ``load_trace`` recovers every event flushed before a
+    crash that never wrote the closing ``]``;
+  * ``write_prometheus`` emits the textfile-collector format (sanitised
+    names, ``_total`` counters, histogram moments) atomically.
+"""
+import json
+import sys
+import threading
+
+import pytest
+
+from repro import telemetry as tel
+from repro.launch.train import run as train_run
+from repro.telemetry.spans import _NULL_SPAN, Tracer, load_trace
+
+
+# -- spans -------------------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_trace_json(tmp_path):
+    path = tmp_path / "trace.json"
+    tr = Tracer().configure(enabled=True, trace_out=path)
+    with tr.span("outer", {"round": 1}):
+        with tr.span("inner"):
+            pass
+        tr.instant("mark", {"k": 3})
+    tr.counter("ring", {"hit": 2, "miss": 1})
+    tr.flush()
+    assert tr.close() == str(path)
+
+    # a CLOSED trace is a plain JSON array -- exactly what Perfetto loads
+    events = json.loads(path.read_text())
+    by_name = {e["name"]: e for e in events}
+    assert set(by_name) == {"outer", "inner", "mark", "ring"}
+
+    outer, inner = by_name["outer"], by_name["inner"]
+    assert outer["ph"] == inner["ph"] == "X"
+    assert outer["args"] == {"round": 1}
+    # spans record on exit, so the INNER event precedes the outer in the
+    # stream; nesting is recovered from the timestamps (ts microseconds)
+    assert events.index(inner) < events.index(outer)
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert all(e["pid"] == outer["pid"] for e in events)
+
+    mark = by_name["mark"]
+    assert (mark["ph"], mark["s"]) == ("i", "t")
+    assert mark["args"] == {"k": 3}
+    ring = by_name["ring"]
+    assert ring["ph"] == "C" and ring["args"] == {"hit": 2, "miss": 1}
+
+
+def test_scalar_counter_and_traced_decorator():
+    tr = Tracer().configure(enabled=True)
+    tr.counter("hits", 7)
+
+    @tr.traced("work/fn")
+    def fn(x):
+        return x + 1
+
+    assert fn(1) == 2
+    events = tr.drain()
+    assert {"ph": "C", "args": {"value": 7}}.items() <= events[0].items()
+    assert events[1]["name"] == "work/fn" and events[1]["ph"] == "X"
+    tr.configure(enabled=False)
+    assert fn(2) == 3  # decorator bypasses the span when disabled
+    assert tr.drain() == []
+
+
+def test_disabled_tracer_is_allocation_free():
+    tr = Tracer()  # enabled=False
+    assert tr.span("x") is _NULL_SPAN
+    assert tr.span("y", {"a": 1}) is _NULL_SPAN
+
+    def burn(n):
+        for _ in range(n):
+            with tr.span("hot/phase", None):
+                pass
+            tr.instant("i")
+            tr.counter("c", 1)
+
+    def blocks(n):
+        burn(64)  # warm up any lazy interpreter state
+        before = sys.getallocatedblocks()
+        burn(n)
+        return sys.getallocatedblocks() - before
+
+    # ambient interpreter noise is a few blocks and CONSTANT; a single
+    # allocation per disabled call would show up as >= n
+    small, large = blocks(100), blocks(20_000)
+    assert large - small < 64, (small, large)
+
+
+def test_tracer_threads_get_own_tid():
+    tr = Tracer().configure(enabled=True)
+
+    def work():
+        with tr.span("t/span"):
+            pass
+
+    th = threading.Thread(target=work)
+    th.start()
+    th.join()
+    with tr.span("main/span"):
+        pass
+    tids = {e["tid"] for e in tr.drain()}
+    assert len(tids) == 2
+
+
+def test_load_trace_recovers_crash_truncated_file(tmp_path):
+    path = tmp_path / "trace.json"
+    tr = Tracer().configure(enabled=True, trace_out=path)
+    for i in range(3):
+        with tr.span(f"s{i}"):
+            pass
+    tr.flush()  # no close(): simulates a killed run (no closing "]")
+    text = path.read_text()
+    assert not text.rstrip().endswith("]")
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(text)
+    events = load_trace(path)
+    assert [e["name"] for e in events] == ["s0", "s1", "s2"]
+
+    # torn final line on top of the missing terminator
+    path.write_text(text[: len(text) - 7])
+    assert [e["name"] for e in load_trace(path)] == ["s0", "s1"]
+    tr.close()
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_kinds_and_absorb():
+    reg = tel.Registry()
+    reg.counter("n").inc(2)
+    reg.counter("n").inc(3)
+    assert reg.counter("n").value == 5
+    with pytest.raises(ValueError):
+        reg.counter("n").inc(-1)
+    with pytest.raises(TypeError):
+        reg.gauge("n")  # kind collision is loud
+
+    reg.absorb({"server_loss": 2.0, "faults_injected": 3, "note": "text"})
+    reg.absorb({"server_loss": 4.0, "faults_injected": 1})
+    snap = reg.snapshot()
+    assert snap["faults_injected"] == 4.0  # COUNTER_KEYS sum
+    assert snap["server_loss"] == 4.0  # gauge keeps the last value
+    h = snap["server_loss_hist"]
+    assert (h["count"], h["sum"], h["min"], h["max"]) == (2, 6.0, 2.0, 4.0)
+    assert "note" not in snap
+
+    # counters=() defers counter-semantic keys to a caller with a more
+    # complete stream: they must be SKIPPED, not re-registered as gauges
+    reg.absorb({"faults_injected": 99.0, "server_loss": 1.0}, counters=())
+    assert reg.snapshot()["faults_injected"] == 4.0
+
+
+def test_registry_totals_match_faulted_train_accounting(tmp_path):
+    """End-to-end: a short faulted train run streams per-round rows to the
+    JSONL sink; the summary row's fault counters must equal the hand-summed
+    per-round counts (log_every=1 and R=1 make the logged rows a complete
+    cover of the dispatches, so the sum IS the launcher's accounting)."""
+    metrics_path = tmp_path / "metrics.jsonl"
+    train_run("olmo-1b", reduced=True, steps=4, m=8, per_client_batch=2,
+              seq_len=32, k=1, eta=0.05, participation=0.5,
+              popstore_mode=True, faults="corrupt=0.3,seed=7",
+              log_every=1, metrics_out=str(metrics_path))
+    rows = tel.read_jsonl(metrics_path)
+    rounds = [r for r in rows if r["kind"] == "round"]
+    (summary,) = [r for r in rows if r["kind"] == "summary"]
+    assert len(rounds) == 4
+    assert summary["faults_injected"] == sum(
+        r["faults_injected"] for r in rounds) > 0
+    assert summary["faults_demoted"] == sum(
+        r["faults_demoted"] for r in rounds)
+    # histogram of the logged loss covers every logged row
+    assert summary["server_loss_hist_count"] == 4
+    assert summary["server_loss"] == rounds[-1]["server_loss"]
+    # the global tracer must be left OFF for the rest of the session
+    assert not tel.enabled()
+
+
+def test_train_telemetry_off_leaves_global_tracer_alone(tmp_path):
+    train_run("olmo-1b", reduced=True, steps=2, m=4, per_client_batch=2,
+              seq_len=32, k=1, eta=0.05, log_every=1)
+    assert not tel.enabled()
+
+
+# -- sinks -------------------------------------------------------------------
+
+
+def test_jsonl_sink_torn_tail_tolerated_midfile_corruption_raises(tmp_path):
+    path = tmp_path / "m.jsonl"
+    with tel.JsonlSink(path) as sink:
+        sink.write({"a": 1})
+        sink.write({"a": 2})
+    with open(path, "a") as f:
+        f.write('{"a": 3, "tor')  # crash mid-row
+    assert [r["a"] for r in tel.read_jsonl(path)] == [1, 2]
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"a": 1}\n{torn}\n{"a": 3}\n')
+    with pytest.raises(json.JSONDecodeError):
+        tel.read_jsonl(bad)  # mid-file corruption is NOT truncation
+
+
+def test_prometheus_textfile_format(tmp_path):
+    reg = tel.Registry()
+    reg.counter("serve/tokens").inc(128)
+    reg.gauge("eta_scale").set(0.5)
+    h = reg.histogram("swap_latency_s")
+    h.observe(0.1)
+    h.observe(0.3)
+    out = tmp_path / "metrics.prom"
+    assert tel.write_prometheus(reg, out) == str(out)
+    text = out.read_text()
+    lines = text.splitlines()
+    assert "# TYPE repro_serve_tokens_total counter" in lines
+    assert "repro_serve_tokens_total 128.0" in lines  # name sanitised: / -> _
+    assert "repro_eta_scale 0.5" in lines
+    assert "repro_swap_latency_s_count 2.0" in lines
+    assert any(ln.startswith("repro_swap_latency_s_mean 0.2") for ln in lines)
+    assert text.endswith("\n")
+    # every sample line parses as "name value" with a legal metric name
+    for ln in lines:
+        if ln.startswith("#"):
+            continue
+        name, val = ln.split(" ")
+        assert tel.metrics._NAME_OK.match(name), name
+        float(val)
+    assert not out.with_suffix(out.suffix + ".tmp").exists()  # atomic write
