@@ -59,6 +59,12 @@ GATED = [
     # staged device body -> host scatter + incremental f64 mean); a pytree
     # sibling exists for the same shape, so this normalises like the rest
     {"algo": "gpdmm", "variant": "partial", "path": "popstore"},
+    # ISSUE 10: the fused residual_norm kernel (the early-termination
+    # criterion: per-row dx2/x2 in one pass over the state arena + its
+    # snapshot) -- every tol > 0 round pays it, so a regression taxes the
+    # whole early-exit path.  Normalised by the same-run screen_uplink
+    # kernel cell (see _sibling_key).
+    {"algo": "residual_norm", "variant": "plain", "path": "kernel_xla"},
 ]
 # "topology" (ISSUE 4) distinguishes the gpdmm_graph rows (star/ring/
 # complete at the same problem shape); records predating it key as None
@@ -82,8 +88,15 @@ def _index(payload):
 
 
 def _sibling_key(key):
-    """The same-run pytree reference cell for a gated arena cell."""
+    """The same-run reference cell a gated cell is normalised by: the pytree
+    round for arena cells; for the residual_norm kernel cell (no pytree
+    sibling exists) the same-run screen_uplink kernel -- another single-pass
+    reduction over the same (m, width) arena shape, so the ratio stays
+    hardware-neutral."""
     problem, algo, variant, _path, _oracle, driver, K, topology = key
+    if algo == "residual_norm":
+        return (problem, "screen_uplink", "plain", "kernel_xla", "native",
+                "per_call", 0, None)
     return (problem, algo, variant, "pytree", "tree", driver, K, topology)
 
 
@@ -105,7 +118,7 @@ def gate(baseline_path: str, fresh_path: str, max_regress: float) -> int:
             # pytree sibling, compared against the baseline's same ratio
             got = rec["us_per_round"] / max(fresh[sib]["us_per_round"], 1e-9)
             want = ref["us_per_round"] / max(base[sib]["us_per_round"], 1e-9)
-            unit = "x pytree"
+            unit = "x pytree" if sib[3] == "pytree" else f"x {sib[1]}"
         else:
             got, want = rec["us_per_round"], ref["us_per_round"]
             unit = "us/round (absolute: no pytree sibling)"

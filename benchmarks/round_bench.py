@@ -752,6 +752,119 @@ def bench_stale(problem: str = "lm_flat", K: int = 4):
     return records
 
 
+# ISSUE 10: auto-tuned stepsizes + residual-based early termination.  Two
+# kinds of rows: (1) the fused residual_norm kernel alone -- ONE pass over
+# the (m, width) client-state arena and its previous-round snapshot emitting
+# per-row dx2/x2 (the early-exit criterion; 2r, the (m,) outputs are
+# O(1/width)); (2) the rounds-to-tol comparison the autotune layer exists
+# for: heterogeneous diagonal-quadratic clients (per-client curvature a_i
+# spread over ~30x, exactly the regime where one global stepsize must be
+# tuned to the WORST client), gpdmm driven to the relative fixed-point
+# residual tol under (a) auto-derived per-client eta_i = safety / L_i and
+# (b) the hand-tuned global eta = safety / max_i L_i.  rounds_auto /
+# rounds_fixed / rounds_speedup record the budget saving at EQUAL tol.
+def bench_autotune(problem: str = "lm_flat", K: int = 4, tol: float = 1e-5,
+                   max_rounds: int = 600):
+    from repro.core import autotune
+
+    jax.clear_caches()
+    spec = PROBLEMS[problem]
+    m = spec["m"]
+    params = _params(spec["shapes"])
+    n = sum(int(jnp.size(v)) for v in params.values())
+    width = arena.ArenaSpec.from_tree(params).width
+    records = []
+
+    # (1) kernel-alone cell
+    x = jax.random.normal(jax.random.key(12), (m, width))
+    prev = x + 0.01 * jax.random.normal(jax.random.key(13), (m, width))
+    impls = ["xla"] + (["pallas"] if jax.default_backend() == "tpu" else [])
+    for impl in impls:
+        fn = jax.jit(lambda a: ops.residual_norm(a, prev, impl=impl))
+        us = time_fn(fn, x)
+        gbps = 2 * m * width * 4 / (us * 1e-6) / 1e9
+        emit(f"residual_norm_{problem}_{impl}", us,
+             f"effective_GBps={gbps:.2f}")
+        records.append({
+            "problem": problem, "algo": "residual_norm", "variant": "plain",
+            "path": f"kernel_{impl}", "oracle": "native", "driver": "per_call",
+            "m": m, "n_params": n, "K": 0,
+            "us_per_round": round(us, 1),
+            "hbm_passes": 2,
+            "state_bytes": m * n * 4,
+            "effective_GBps": round(gbps, 2),
+        })
+
+    # (2) rounds-to-tol, auto vs hand-tuned.  grad_i(x) = a_i (x - t_i):
+    # curvature a_i log-spaced over ~30x, per-client targets t_i, so the
+    # stiffest client caps the one-global-eta setting while auto hands every
+    # client its own safety/a_i
+    assert width == n, "lm_flat's flat leaf is already lane-aligned"
+    a = jnp.logspace(-1.0, 0.5, m, dtype=jnp.float32)
+    t = 0.5 * jax.random.normal(jax.random.key(14), (m, width))
+    batch = {"a": a, "t": t}
+
+    def _het_tree_grad(p, b):
+        (leaf,) = jax.tree.leaves(p)
+        g = b["a"] * (leaf - b["t"])
+        return jax.tree.unflatten(jax.tree.structure(p), [g])
+
+    het_oracle = make_oracle(
+        _het_tree_grad,
+        grad_arena=lambda spec_: (
+            lambda xa, b: b["a"][:, None] * (xa - b["t"])))
+
+    def rounds_to_tol(cfg):
+        opt = make(cfg)
+        state = opt.init(jax.tree.map(jnp.copy, params), m)
+
+        @jax.jit
+        def rf(s):
+            s2, _ = opt.round(s, het_oracle, batch)
+            return s2, autotune.state_residual(s, s2)
+
+        ee = autotune.EarlyExit(tol, patience=1)
+        us = None
+        for r in range(1, max_rounds + 1):
+            if r == 2:
+                t0 = time.perf_counter()  # round 1 paid the compile
+            state, res = rf(state)
+            if r >= 2:
+                jax.block_until_ready(res["res_dx2"])
+                us = (time.perf_counter() - t0) / (r - 1) * 1e6
+            if ee.update(res["res_dx2"], res["res_x2"]) is not None:
+                return r, us
+        return max_rounds, us
+
+    # BOTH cells run the same explicit server penalty rho = 1/(K eta_hand):
+    # rho is a server-side quantity the stepsizes don't decide (the mean-eta
+    # default would hand the two runs different penalties and confound the
+    # comparison); what is measured is purely per-client vs global stepsize
+    eta_hand = autotune.SAFETY / float(a.max())
+    rho = 1.0 / (K * eta_hand)
+    base_cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta="auto",
+                               use_arena=True, tol=tol, rho=rho)
+    auto_cfg = autotune.resolve(base_cfg, het_oracle, params, m, batch)
+    hand_cfg = FederatedConfig(algorithm="gpdmm", inner_steps=K, eta=eta_hand,
+                               use_arena=True, tol=tol, rho=rho)
+    r_auto, us_auto = rounds_to_tol(auto_cfg)
+    r_hand, _ = rounds_to_tol(hand_cfg)
+    rec = _record(problem, "gpdmm", "autotune", "arena", "native",
+                  "per_round", m, n, K, us_auto,
+                  round_passes("gpdmm", "plain", K, arena=True,
+                               multi_leaf=len(spec["shapes"]) > 1,
+                               oracle="native") + 4)  # + residual_norm reads
+    rec["tol"] = tol
+    rec["rounds_auto"] = r_auto
+    rec["rounds_fixed"] = r_hand
+    rec["rounds_speedup"] = round(r_hand / max(r_auto, 1), 2)
+    records.append(rec)
+    print(f"  -> {problem}/gpdmm/autotune: tol={tol:g} reached in "
+          f"{r_auto} rounds (auto per-client eta) vs {r_hand} "
+          f"(hand-tuned global eta): x{rec['rounds_speedup']:.1f} fewer")
+    return records
+
+
 def run(out_path: str = "BENCH_round.json"):
     trajectory = []
     for problem in PROBLEMS:
@@ -764,8 +877,22 @@ def run(out_path: str = "BENCH_round.json"):
     trajectory.extend(bench_topology())
     trajectory.extend(bench_screen())
     trajectory.extend(bench_stale())
+    trajectory.extend(bench_autotune())
     payload = {
         "bench": "round_bench",
+        "autotune_note": "residual_norm rows (ISSUE 10) time the fused "
+                "early-termination kernel alone -- ONE pass over the "
+                "(m, width) client-state arena and its previous-round "
+                "snapshot emitting per-row dx2/x2 (kernel_pallas appears "
+                "when a TPU is present); the kernel_xla cell is "
+                "regression-gated.  The gpdmm autotune row drives "
+                "heterogeneous diagonal-quadratic clients (30x curvature "
+                "spread) to the relative fixed-point residual tol: "
+                "rounds_auto is the budget under auto-derived per-client "
+                "eta_i = safety/L_i, rounds_fixed under the hand-tuned "
+                "global eta = safety/max L_i, rounds_speedup their ratio -- "
+                "fewer rounds at EQUAL tol is the claim the autotune layer "
+                "ships.",
         "popstore_note": "path=popstore rows (PR 8) run the host-resident "
                 "population store (core.popstore): client buffers live in "
                 "host numpy, only the sampled cohort stages to device "

@@ -124,8 +124,23 @@ class FederatedConfig:
 
     algorithm: str = "gpdmm"  # gpdmm | agpdmm | scaffold | fedavg | fedsplit
     inner_steps: int = 2  # K in the paper
-    eta: float = 1e-2  # gradient stepsize (eta in Alg. 1/2)
+    # Gradient stepsize (eta in Alg. 1/2).  Three forms:
+    #   * float          -- one global stepsize, the paper's setting;
+    #   * "auto"         -- derive PER-CLIENT stepsizes eta_i = safety / L_i
+    #                       from a power-iteration / Hutchinson estimate of
+    #                       each client's smoothness L_i (core.autotune).
+    #                       MUST be resolved host-side before the round is
+    #                       built: ``core.autotune.resolve`` replaces it with
+    #                       the tuple form below; ``core.make`` rejects an
+    #                       unresolved "auto" loudly.
+    #   * tuple[float]   -- resolved per-client stepsizes, one per client row
+    #                       (hashable, so the config stays jit-static; the
+    #                       kernels take the derived values as a per-client
+    #                       stepsize operand instead of a baked scalar).
+    eta: float | str | Tuple[float, ...] = 1e-2
     rho: Optional[float] = None  # None -> 1/(K*eta), the paper's default
+    #                              (mean eta under per-client auto-eta; see
+    #                              core.api.resolved_rho)
     layout: str = "client_axis"
     num_clients: Optional[int] = None  # None -> client axis size
     # algorithm variants
@@ -288,8 +303,52 @@ class FederatedConfig:
     # Staleness discount: an admitted row s rounds late is mixed toward the
     # server's cached view with weight stale_gamma**s.
     stale_gamma: float = 0.5
+    # Residual-based early termination (core.autotune): the round emits the
+    # fused residual norms ||x - x_prev||^2 / ||x||^2 (ops.residual_norm)
+    # and the HOST driver stops once the relative fixed-point residual
+    # ||x - x_prev|| / ||x|| stays below ``tol`` for ``patience``
+    # consecutive rounds (pfb-clean's primal_dual stopping rule).  tol = 0
+    # disables the check AND the metric -- the gate is a static Python
+    # decision, so a tol=0 round compiles to the identical fixed-budget
+    # graph (the same pattern as the async engine's w > 0 guard).
+    tol: float = 0.0
+    patience: int = 1
 
     def __post_init__(self):
+        # stepsize / inner-loop hyper-parameters fail AT PARSE TIME with the
+        # field name -- an eta <= 0 or K < 1 otherwise only surfaces as NaN
+        # rounds (or a ZeroDivisionError in resolved_rho) deep inside the
+        # jitted driver
+        if self.inner_steps < 1:
+            raise ValueError(
+                f"inner_steps must be >= 1, got {self.inner_steps}")
+        if isinstance(self.eta, str):
+            if self.eta != "auto":
+                raise ValueError(
+                    f"eta must be a positive stepsize, a tuple of them, or "
+                    f"'auto', got {self.eta!r}")
+        elif isinstance(self.eta, tuple):
+            if not self.eta or any(
+                    not (isinstance(e, (int, float)) and e > 0.0)
+                    for e in self.eta):
+                raise ValueError(
+                    f"eta tuple must hold one positive per-client stepsize "
+                    f"per row, got {self.eta!r}")
+        elif not (isinstance(self.eta, (int, float)) and self.eta > 0.0):
+            raise ValueError(
+                f"eta must be a positive stepsize, got {self.eta!r}")
+        if self.rho is not None and not self.rho > 0.0:
+            raise ValueError(
+                f"rho must be a positive penalty (or None for the 1/(K*eta) "
+                f"default), got {self.rho}")
+        if not self.tol >= 0.0:
+            raise ValueError(
+                f"tol must be >= 0 (0 disables early termination), got "
+                f"{self.tol}")
+        if self.patience < 1:
+            raise ValueError(
+                f"patience must be >= 1 consecutive sub-tol rounds, got "
+                f"{self.patience}")
         if not (0.0 < self.participation <= 1.0):
             raise ValueError(
                 f"participation must be in (0, 1], got {self.participation}")

@@ -22,6 +22,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FederatedConfig
 from repro.core import arena, faults, staleness
@@ -31,8 +32,8 @@ from repro.core.api import (
     use_cohort,
 )
 from repro.core.gpdmm import (
-    arena_metrics, arena_tail, cohort_tail, inner_steps, inner_steps_arena,
-    participation_key, popstore_tail,
+    _eta_val, arena_metrics, arena_tail, cohort_tail, inner_steps,
+    inner_steps_arena, participation_key, popstore_tail,
 )
 from repro.kernels import ops
 
@@ -46,6 +47,9 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
     K = cfg.inner_steps
     f32 = jnp.float32
 
+    eta_v = _eta_val(cfg.eta)
+    per_client = np.ndim(eta_v) > 0
+
     def body(server, staged, idx, round_idx, batch):
         x_s_row = spec.pack(server["x_s"])
         u_hat_c = staged["u_hat"]
@@ -53,15 +57,17 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
         batch_c = cohort_batch(batch, idx, m, per_step)
 
         def inner(rows, b):
-            (lam_t,) = rows
+            lam_t = rows[0]
+            eta_t = rows[1] if per_client else eta_v  # tiled with the rows
             x0 = jnp.broadcast_to(x_s_row[None], lam_t.shape)
             return inner_steps_arena(
-                spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta,
+                spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=eta_t,
                 rho=rho, per_step=per_step,
                 vr_snapshot=x0 if cfg.variance_reduction == "svrg" else None,
             )
 
-        x_K, _ = run_cohort_inner(cfg, inner, (lam_c,), batch_c,
+        rows = (lam_c,) + ((jnp.asarray(eta_v)[idx],) if per_client else ())
+        x_K, _ = run_cohort_inner(cfg, inner, rows, batch_c,
                                   per_step=per_step)
         _, uplink = ops.round_tail(x_K, lam_c, x_s_row, rho,
                                    with_lam_is=False)
@@ -93,17 +99,21 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     )
     lam_c = ops.row_gather(lam, idx)
     batch_c = cohort_batch(batch, idx, m, per_step_batches)
+    eta_v = _eta_val(cfg.eta)
+    per_client = np.ndim(eta_v) > 0
 
     def inner(rows, b):
-        (lam_t,) = rows
+        lam_t = rows[0]
+        eta_t = rows[1] if per_client else eta_v  # tiled with the state rows
         x0 = jnp.broadcast_to(x_s_row[None], lam_t.shape)
         return inner_steps_arena(
-            spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta, rho=rho,
+            spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=eta_t, rho=rho,
             per_step=per_step_batches,
             vr_snapshot=x0 if cfg.variance_reduction == "svrg" else None,
         )
 
-    x_K, _ = run_cohort_inner(cfg, inner, (lam_c,), batch_c,
+    rows = (lam_c,) + ((jnp.asarray(eta_v)[idx],) if per_client else ())
+    x_K, _ = run_cohort_inner(cfg, inner, rows, batch_c,
                               per_step=per_step_batches)
 
     _, uplink = ops.round_tail(x_K, lam_c, x_s_row, rho, with_lam_is=False)

@@ -64,13 +64,22 @@ class FedOpt(NamedTuple):
 #       kernel's per-client offset row (``inner_loop_affine(..., off=...)``)
 #       -- no extra (m, width) materialisation, no per-step re-read.
 #
+#   grad_fn.curvature_arena(spec)     -> curv(x_arena, batch) -> L (m,)
+#       Per-client smoothness estimates in arena coordinates (the auto-eta
+#       stepsize derivation, ``core.autotune``).  ``x_arena`` is the packed
+#       (m, width) point the curvature is probed at (affine oracles ignore
+#       it).  When absent, ``autotune.estimate_L`` falls back to a power
+#       iteration on ``affine_arena``'s H blocks, then to a Hessian-vector
+#       power iteration through ``jax.jvp`` of the arena (or plain) grad.
+#
 # ``make_oracle`` assembles such an annotated callable; ``arena_grad``
 # resolves the best available stacked arena gradient for any grad_fn, and
 # ``affine_case`` gates the fused K-step kernel (shared by GPDMM/AGPDMM and
 # the SCAFFOLD/FedAvg offset variant).
 
 
-def make_oracle(grad_fn, *, grad_arena=None, affine_arena=None):
+def make_oracle(grad_fn, *, grad_arena=None, affine_arena=None,
+                curvature_arena=None):
     """Annotate a per-client ``grad_fn`` with arena-native fast paths."""
 
     def oracle(x, batch):
@@ -80,6 +89,8 @@ def make_oracle(grad_fn, *, grad_arena=None, affine_arena=None):
         oracle.grad_arena = grad_arena
     if affine_arena is not None:
         oracle.affine_arena = affine_arena
+    if curvature_arena is not None:
+        oracle.curvature_arena = curvature_arena
     return oracle
 
 
@@ -293,8 +304,24 @@ def run_cohort_inner(cfg: FederatedConfig, fn, rows: tuple, batch, *,
 
 
 def resolved_rho(cfg: FederatedConfig) -> float:
-    """The paper's default rho = 1/(K * eta) (matched to SCAFFOLD's scaling)."""
-    return cfg.rho if cfg.rho is not None else 1.0 / (cfg.inner_steps * cfg.eta)
+    """The paper's default rho = 1/(K * eta) (matched to SCAFFOLD's scaling).
+
+    rho is a SERVER-side quantity -- one penalty shared by the mean and the
+    dual refresh -- so under per-client auto-eta (``eta`` resolved to a
+    tuple by ``core.autotune``) the default derives from the MEAN of the
+    per-client stepsizes.  Deriving it per client would hand every client
+    its own penalty while the server still applies one rho in
+    ``lam_s' = rho (u - x_s')``, silently desynchronising the dual refresh
+    from the clients' inner steps -- pinned by ``tests/test_autotune.py``.
+    Always a Python float (jit-static); raises on an unresolved "auto".
+    """
+    if cfg.rho is not None:
+        return cfg.rho
+    from repro.core import autotune
+
+    rho = 1.0 / (cfg.inner_steps * autotune.mean_eta(cfg))
+    assert rho > 0.0, rho
+    return rho
 
 
 def client_batches(batch, k: int, per_step: bool):
@@ -304,7 +331,8 @@ def client_batches(batch, k: int, per_step: bool):
     return jax.tree.map(lambda x: x[k], batch)
 
 
-def make_scan_rounds(fed: FedOpt, grad_fn, per_step_batches: bool = False):
+def make_scan_rounds(fed: FedOpt, grad_fn, per_step_batches: bool = False,
+                     tol: float = 0.0):
     """Round-batched driver: returns ``run(state, batches) -> (state, metrics)``
     executing R full rounds inside ONE ``lax.scan`` (batch leaves carry a
     leading R dim; metrics come back stacked ``(R, ...)``).
@@ -315,10 +343,22 @@ def make_scan_rounds(fed: FedOpt, grad_fn, per_step_batches: bool = False):
     separate ``fed.round`` calls (``tests/test_inner_loop.py``) -- the
     participation RNG is folded from the carried round counter, so masks
     match the loop-of-rounds schedule exactly.
+
+    ``tol > 0`` (residual-based early termination, ``core.autotune``) adds
+    the fused fixed-point residual of every round to the metrics
+    (``res_dx2``/``res_x2``); the HOST loop between chunk dispatches applies
+    the stopping rule -- the scan itself always runs its full R rounds.
+    The gate is a static Python decision: ``tol=0`` compiles the identical
+    fixed-budget graph, with no snapshot of the pre-round state alive.
     """
 
     def run(state, batches):
         def body(s, b):
+            if tol > 0.0:
+                from repro.core import autotune
+
+                s2, metrics = fed.round(s, grad_fn, b, per_step_batches)
+                return s2, {**metrics, **autotune.state_residual(s, s2)}
             return fed.round(s, grad_fn, b, per_step_batches)
 
         return jax.lax.scan(body, state, batches)
@@ -344,6 +384,11 @@ def make(cfg: FederatedConfig) -> FedOpt:
     }
     if cfg.algorithm not in algos:
         raise KeyError(f"unknown federated algorithm {cfg.algorithm!r}")
+    if isinstance(cfg.eta, str):
+        raise ValueError(
+            "eta='auto' must be resolved host-side before the round is "
+            "built: call core.autotune.resolve(cfg, grad_fn, params, m, "
+            "batch) to derive the per-client stepsizes")
     if cfg.topology != "star" and cfg.algorithm not in ("pdmm_graph", "gpdmm_graph"):
         if cfg.algorithm == "gpdmm":
             # GPDMM over a general network IS graph-PDMM with the gradient

@@ -1,0 +1,306 @@
+"""Auto-tuned stepsizes and residual-based early termination.
+
+Every run used to hand-tune one global ``eta`` and burn a fixed round
+budget even after the iterates converged.  This module ports pfb-clean's
+``power_method.py`` / ``primal_dual.py`` recipe (SNIPPETS.md) to the
+federated arena:
+
+  * **Per-client smoothness L_i** -- a batched power iteration over the
+    per-client Hessian blocks, run as ONE jitted ``lax.fori_loop`` on the
+    stacked ``(m, ...)`` operands (no per-client Python loop).  Affine
+    oracles (``affine_arena``: grad_i(x) = H_i x - c_i) power-iterate their
+    H blocks directly; non-affine oracles fall back to a Hessian-vector
+    power iteration through ``jax.jvp(grad)`` (the Hutchinson-style
+    curvature probe -- exact for quadratics, a local estimate elsewhere).
+    Oracles may override either path with an explicit ``curvature_arena``
+    hook (``core.api`` protocol).
+
+  * **Derived stepsizes** -- ``eta_i = safety / L_i`` (safety < 1 keeps
+    ``1/eta_i > L_i``, the contraction condition ``core.theory.gpdmm_beta``
+    asserts).  ``resolve`` turns ``eta="auto"`` in a ``FederatedConfig``
+    into the hashable tuple form; the kernels consume the values as a
+    per-client stepsize OPERAND (``kernels/ops`` ``_step_arr``), so the
+    config stays jit-static and the scalar path stays bitwise untouched.
+
+  * **Residual-based stopping** -- pfb-clean's relative fixed-point
+    residual ``eps = ||x - x_prev|| / ||x||``: ``state_residual`` folds one
+    fused ``ops.residual_norm`` pass per 2-D state buffer into two scalar
+    round metrics (``res_dx2``/``res_x2``), and the HOST driver
+    (``EarlyExit``) terminates the round loop once eps stays below ``tol``
+    for ``patience`` consecutive rounds.  ``tol=0`` disables both the
+    metric and the check (a static Python gate), so the fixed-budget graph
+    is compiled unchanged.
+
+See ``docs/autotune.md`` for the full contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederatedConfig
+
+# Power-iteration budget: the Rayleigh-quotient estimate converges as
+# (lambda_2/lambda_1)^(2k), so ~tens of matvecs pin L to float precision on
+# anything but a pathologically flat spectrum.
+POWER_ITERS = 96
+
+# 1/eta_i = L_i / safety must exceed L_i (the theory contraction condition);
+# 0.5 doubles the margin, matching the hand-tuned settings' headroom.
+SAFETY = 0.5
+
+
+def _normalize(v):
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-30)
+
+
+def _v0(m: int, w: int):
+    """Deterministic start vector with a generic spectral footprint: a
+    constant plus a ramp, so it is never orthogonal to a top eigenvector
+    that a pure ones-vector could miss.  Padded coordinates are annihilated
+    by the first H multiply (H is zero there by the arena invariant)."""
+    ramp = jnp.linspace(0.0, 0.5, w, dtype=jnp.float32)
+    return jnp.broadcast_to(1.0 + ramp, (m, w))
+
+
+def power_iter_arena(H, iters: int = POWER_ITERS):
+    """Largest eigenvalue of each PSD block of ``H (m, W, W)`` by batched
+    power iteration: one jitted ``fori_loop`` over the stacked blocks, no
+    per-client Python loop.  Returns ``L (m,)`` f32 (Rayleigh quotients of
+    the final normalised iterates)."""
+    m, w, _ = H.shape
+    Hf = H.astype(jnp.float32)
+
+    def body(_, v):
+        return _normalize(jnp.einsum("mij,mj->mi", Hf, v))
+
+    v = jax.lax.fori_loop(0, iters, body, _normalize(_v0(m, w)))
+    return jnp.einsum("mi,mij,mj->m", v, Hf, v)
+
+
+def power_iter_hvp(hvp, m: int, w: int, iters: int = POWER_ITERS):
+    """Power iteration through a stacked Hessian-vector product
+    ``hvp(v (m, w)) -> (m, w)`` (each client row independent).  Returns
+    ``L (m,)``.  Curvature can be sign-indefinite away from a minimum, so
+    the Rayleigh quotient is returned in absolute value."""
+
+    def body(_, v):
+        return _normalize(hvp(v))
+
+    v = jax.lax.fori_loop(0, iters, body, _normalize(_v0(m, w)))
+    return jnp.abs(jnp.einsum("mi,mi->m", v, hvp(v)))
+
+
+def estimate_L(grad_fn, params, m: int, batch, *, spec=None,
+               iters: int = POWER_ITERS):
+    """Per-client smoothness estimates ``L (m,) np.float64``.
+
+    Resolution order (the ``core.api`` oracle protocol):
+      1. ``grad_fn.curvature_arena(spec)`` -- the oracle's own estimator;
+      2. ``grad_fn.affine_arena``          -- power iteration on the H blocks;
+      3. ``grad_fn.grad_arena``            -- HVP power iteration via
+                                              ``jax.jvp`` of the arena grad;
+      4. plain ``grad_fn``                 -- HVP power iteration via a
+                                              vmapped pytree ``jax.jvp``.
+    All four run as one jitted batched loop; the estimate is taken at the
+    CURRENT ``params`` (exact for affine/quadratic oracles, a local probe
+    for nonconvex ones).
+    """
+    if spec is None:
+        from repro.core import arena
+
+        spec = arena.ArenaSpec.from_tree(params)
+    w = spec.width
+
+    curv = getattr(grad_fn, "curvature_arena", None)
+    if curv is not None:
+        x0 = jnp.broadcast_to(spec.pack(params)[None], (m, w))
+        L = jax.jit(curv(spec))(x0, batch)
+        return np.asarray(L, np.float64)
+
+    affine = getattr(grad_fn, "affine_arena", None)
+    if affine is not None:
+        def run(b):
+            H, _ = affine(spec, b)
+            return power_iter_arena(H, iters)
+
+        return np.asarray(jax.jit(run)(batch), np.float64)
+
+    ga_factory = getattr(grad_fn, "grad_arena", None)
+    if ga_factory is not None:
+        ga = ga_factory(spec)
+        x0 = jnp.broadcast_to(spec.pack(params)[None], (m, w))
+
+        def run(b):
+            def hvp(v):
+                return jax.jvp(lambda xa: ga(xa, b), (x0,), (v,))[1]
+
+            return power_iter_hvp(hvp, m, w, iters)
+
+        return np.asarray(jax.jit(run)(batch), np.float64)
+
+    # plain pytree oracle: vmapped per-client jvp through grad_fn, with the
+    # probe vector carried in arena coordinates so the batched power loop
+    # stays a single fori_loop
+    def run(b):
+        def hvp(v):
+            def one(bi, vi):
+                tangent = spec.unpack(vi)
+                return spec.pack(jax.jvp(
+                    lambda p: grad_fn(p, bi), (params,), (tangent,))[1])
+
+            return jax.vmap(one)(b, v)
+
+        return power_iter_hvp(hvp, m, w, iters)
+
+    return np.asarray(jax.jit(run)(batch), np.float64)
+
+
+def derive_eta(L, safety: float = SAFETY):
+    """``eta_i = safety / L_i`` (positive-clamped against degenerate zero
+    curvature, where any stepsize is stable)."""
+    L = np.maximum(np.asarray(L, np.float64), 1e-12)
+    return safety / L
+
+
+def resolve(cfg: FederatedConfig, grad_fn, params, m: int, batch, *,
+            iters: int = POWER_ITERS, safety: float = SAFETY) -> FederatedConfig:
+    """Host-side ``eta="auto"`` resolution: estimate per-client L_i, derive
+    ``eta_i = safety / L_i``, and return the config with ``eta`` replaced by
+    the hashable per-client tuple.  A no-op for scalar/tuple eta.  MUST run
+    before the round is built -- the derived values are trace-static (the
+    kernels take them as a per-client operand, but the config itself stays
+    hashable), and ``core.make`` rejects an unresolved "auto" loudly."""
+    if cfg.eta != "auto":
+        return cfg
+    L = estimate_L(grad_fn, params, m, batch, iters=iters)
+    eta = derive_eta(L, safety)
+    return dataclasses.replace(cfg, eta=tuple(float(e) for e in eta))
+
+
+def client_eta(cfg: FederatedConfig, m: Optional[int] = None):
+    """The round's eta in kernel-ready form: a Python float (the baked
+    scalar path, bitwise the pre-autotune graphs) or an ``(m,) np.float32``
+    array (per-client auto-eta, fed to the kernels as a stepsize operand).
+    Raises on unresolved ``eta="auto"``."""
+    if isinstance(cfg.eta, str):
+        raise ValueError(
+            "eta='auto' must be resolved host-side (core.autotune.resolve) "
+            "before the round is built")
+    if isinstance(cfg.eta, tuple):
+        eta = np.asarray(cfg.eta, np.float32)
+        if m is not None and eta.shape != (m,):
+            raise ValueError(
+                f"per-client eta has {eta.shape[0]} entries for {m} clients")
+        return eta
+    return float(cfg.eta)
+
+
+def mean_eta(cfg: FederatedConfig) -> float:
+    """The scalar eta the shared server-side quantities are derived from:
+    the mean over clients under per-client auto-eta (see
+    ``core.api.resolved_rho``), the plain value otherwise."""
+    if isinstance(cfg.eta, str):
+        raise ValueError(
+            "eta='auto' must be resolved host-side (core.autotune.resolve) "
+            "before the round is built")
+    if isinstance(cfg.eta, tuple):
+        return float(np.mean(np.asarray(cfg.eta, np.float64)))
+    return float(cfg.eta)
+
+
+def scale_eta(cfg: FederatedConfig, scale: float) -> FederatedConfig:
+    """Uniformly rescale eta (the watchdog's rollback backoff): multiplies
+    every per-client entry under the tuple form, the scalar otherwise."""
+    if scale == 1.0:
+        return cfg
+    if isinstance(cfg.eta, tuple):
+        return dataclasses.replace(
+            cfg, eta=tuple(float(e) * scale for e in cfg.eta))
+    return dataclasses.replace(cfg, eta=cfg.eta * scale)
+
+
+# ---------------------------------------------------------------------------
+# residual-based early termination
+# ---------------------------------------------------------------------------
+
+# State entries that converge at the PDMM fixed point (the monotone-operator
+# stopping rule covers primal AND dual iterates): server/client primals,
+# duals, control variates, and the integrated server view.  Matches the key
+# sets of all round engines (see launch/steps.state_shardings); entries a
+# given algorithm lacks are skipped, non-float leaves (round counters, rng
+# keys, masks) never contribute.
+RESIDUAL_KEYS = ("x_s", "x_c", "lam_s", "u_hat", "c_i", "c", "z_s", "x", "z")
+
+
+def state_residual(prev, new):
+    """Squared fixed-point residual of one round, as two scalar metrics:
+
+        res_dx2 = sum over state buffers of ||s_new - s_prev||^2
+        res_x2  = sum over state buffers of ||s_new||^2
+
+    2-D ``(rows, width)`` buffers ride the fused ``ops.residual_norm``
+    kernel (one pass over each arena instead of separate sub/square/sum
+    chains); other float leaves take plain f32 jnp reductions.  The host
+    combines the two into pfb-clean's relative criterion
+    ``sqrt(res_dx2 / res_x2) < tol`` (``EarlyExit``)."""
+    from repro.kernels import ops
+
+    if not (isinstance(prev, dict) and isinstance(new, dict)):
+        raise TypeError("state_residual expects dict round states")
+    dx2 = jnp.float32(0.0)
+    x2 = jnp.float32(0.0)
+    for k in RESIDUAL_KEYS:
+        if k not in new or k not in prev:
+            continue
+        for p, q in zip(jax.tree.leaves(prev[k]), jax.tree.leaves(new[k])):
+            if not jnp.issubdtype(q.dtype, jnp.floating):
+                continue
+            if q.ndim == 2:
+                d_rows, n_rows = ops.residual_norm(q, p)
+                dx2 = dx2 + jnp.sum(d_rows)
+                x2 = x2 + jnp.sum(n_rows)
+            else:
+                qf = q.astype(jnp.float32)
+                d = qf - p.astype(jnp.float32)
+                dx2 = dx2 + jnp.sum(d * d)
+                x2 = x2 + jnp.sum(qf * qf)
+    return {"res_dx2": dx2, "res_x2": x2}
+
+
+class EarlyExit:
+    """Host-side tracker for the relative-residual stopping rule.
+
+    Feed it the stacked ``res_dx2``/``res_x2`` rows of each dispatched
+    chunk; it returns the 0-based in-chunk index of the round AFTER which
+    the run may stop -- the first round taking the count of CONSECUTIVE
+    sub-``tol`` rounds to ``patience`` -- or None to keep going.  With
+    ``tol=0`` it never fires (the driver compiles the fixed-budget graph
+    and skips the metric entirely, so there is nothing to feed)."""
+
+    def __init__(self, tol: float, patience: int = 1):
+        self.tol = float(tol)
+        self.patience = int(patience)
+        self.hits = 0
+        self.last_rel = float("inf")
+
+    def update(self, dx2, x2) -> Optional[int]:
+        if self.tol <= 0.0:
+            return None
+        dx2 = np.atleast_1d(np.asarray(dx2, np.float64))
+        x2 = np.atleast_1d(np.asarray(x2, np.float64))
+        for j in range(dx2.shape[0]):
+            rel = math.sqrt(dx2[j] / max(x2[j], 1e-30))
+            self.last_rel = rel
+            if rel < self.tol:
+                self.hits += 1
+                if self.hits >= self.patience:
+                    return j
+            else:
+                self.hits = 0
+        return None

@@ -17,6 +17,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FederatedConfig
 from repro.core import arena, faults, staleness
@@ -24,7 +25,7 @@ from repro.core import tree_util as T
 from repro.core.api import (
     FedOpt, cohort_batch, run_cohort_inner, use_arena, use_cohort,
 )
-from repro.core.gpdmm import participation_key, popstore_tail
+from repro.core.gpdmm import _eta_val, _step_for, participation_key, popstore_tail
 from repro.core.scaffold import inner_steps_plain_arena
 from repro.kernels import ops
 
@@ -34,7 +35,8 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
     the cohort runs the plain K-step loop from the server row; only the
     staged ``u_hat`` rows (EF21 integrator / silence fallback) move, and the
     host driver maintains the population mean incrementally."""
-    K, eta = cfg.inner_steps, cfg.eta
+    K, eta = cfg.inner_steps, _eta_val(cfg.eta)
+    per_client = np.ndim(eta) > 0
     f32 = jnp.float32
 
     def body(server, staged, idx, round_idx, batch):
@@ -42,15 +44,17 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
         u_hat_c = staged["u_hat"]
         batch_c = cohort_batch(batch, idx, m, per_step)
 
-        def inner(_rows, b):
+        def inner(rows, b):
+            eta_t = rows[0] if per_client else eta  # tiled with the batch
             mc = jax.tree.leaves(b)[0].shape[1 if per_step else 0]
             x0 = jnp.broadcast_to(x_s_row[None], (mc, spec.width))
             return inner_steps_plain_arena(
-                spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+                spec, grad_fn, x0, x_s_row, b, K=K, eta=eta_t,
                 per_step=per_step,
             )
 
-        x_K = run_cohort_inner(cfg, inner, (), batch_c, per_step=per_step)
+        rows = (jnp.asarray(eta)[idx],) if per_client else ()
+        x_K = run_cohort_inner(cfg, inner, rows, batch_c, per_step=per_step)
         uplink, keep_c, fm = popstore_tail(cfg, spec, x_s_row, u_hat_c, x_K,
                                            idx, round_idx, m)
         metrics = {
@@ -82,7 +86,8 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     arena-resident u_hat cache, and the server mean over the scattered
     buffer realises (sum_active x_K + sum_silent u_hat) / m exactly as the
     masked path's mean-of-selected-rows."""
-    K, eta = cfg.inner_steps, cfg.eta
+    K, eta = cfg.inner_steps, _eta_val(cfg.eta)
+    per_client = np.ndim(eta) > 0
     spec = arena.ArenaSpec.from_tree(state["x_s"])
     u_hat = state["u_hat"]  # guaranteed: participation < 1 carries the cache
     m = u_hat.shape[0]
@@ -92,15 +97,17 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     )
     batch_c = cohort_batch(batch, idx, m, per_step_batches)
 
-    def inner(_rows, b):
+    def inner(rows, b):
+        eta_t = rows[0] if per_client else eta  # tiled with the batch
         mc = jax.tree.leaves(b)[0].shape[1 if per_step_batches else 0]
         x0 = jnp.broadcast_to(x_s_row[None], (mc, spec.width))
         return inner_steps_plain_arena(
-            spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+            spec, grad_fn, x0, x_s_row, b, K=K, eta=eta_t,
             per_step=per_step_batches,
         )
 
-    x_K = run_cohort_inner(cfg, inner, (), batch_c, per_step=per_step_batches)
+    rows = (jnp.asarray(eta)[idx],) if per_client else ()
+    x_K = run_cohort_inner(cfg, inner, rows, batch_c, per_step=per_step_batches)
 
     uplink = x_K
     if cfg.uplink_bits is not None:  # EF21 on the cohort's cached rows only
@@ -198,7 +205,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     if use_arena(cfg, state["x_s"]):
         return _round_arena(cfg, state, grad_fn, batch, per_step_batches)
-    K, eta = cfg.inner_steps, cfg.eta
+    K, eta = cfg.inner_steps, _eta_val(cfg.eta)
     x_s = state["x_s"]
     m = _num_clients(state, batch, per_step_batches)
     x_s_b = T.tree_broadcast(x_s, m)
@@ -208,7 +215,8 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
         b = xs_k if per_step_batches else batch
         g = vgrad(x, b)
         # plain SGD step: lam-free fused update with rho = 0 (xs unused)
-        x_new = T.tmap(lambda xx, gg: ops.fused_update(xx, gg, xx, None, eta, 0.0), x, g)
+        x_new = T.tmap(lambda xx, gg: ops.fused_update(
+            xx, gg, xx, None, _step_for(eta, xx), 0.0), x, g)
         return x_new, None
 
     if per_step_batches:

@@ -27,6 +27,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FederatedConfig
 from repro.core import arena, faults, staleness
@@ -36,6 +37,25 @@ from repro.core.api import (
     run_cohort_inner, use_arena, use_cohort,
 )
 from repro.kernels import ops
+
+
+def _eta_val(eta):
+    """Kernel-ready view of ``cfg.eta``: the host-resolved per-client tuple
+    (``eta="auto"``, see ``core.autotune.resolve``) becomes a static
+    ``(m,) np.float32`` array; scalars (and already-traced per-cohort rows)
+    pass through untouched, so the scalar path's step arithmetic stays the
+    identical baked Python float and its traced graphs are bitwise
+    unchanged."""
+    return np.asarray(eta, np.float32) if isinstance(eta, tuple) else eta
+
+
+def _step_for(step, leaf):
+    """Per-leaf view of a (possibly per-client) stepsize for the pytree
+    path: scalars pass through, per-client arrays broadcast over the leaf's
+    trailing dims."""
+    if np.ndim(step) == 0:
+        return step
+    return jnp.asarray(step, jnp.float32).reshape((-1,) + (1,) * (leaf.ndim - 1))
 
 
 def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
@@ -55,6 +75,7 @@ def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
     rates under minibatch noise at the cost of 2x gradient evals per step
     plus one pass at the snapshot.
     """
+    eta = _eta_val(eta)
     step_c = 1.0 / (1.0 / eta + rho)
     vgrad = jax.vmap(grad_fn)
 
@@ -73,7 +94,8 @@ def inner_steps(grad_fn, x0, x_s_b, lam_s, batch, *, K, eta, rho, per_step,
             g_snap = vgrad(vr_snapshot, b)
             g = T.tmap(lambda a, c, d: a - c + d, g, g_snap, gbar)
         x_new = T.tmap(
-            lambda xx, gg, ss, ll: ops.fused_update(xx, gg, ss, ll, step_c, rho),
+            lambda xx, gg, ss, ll: ops.fused_update(
+                xx, gg, ss, ll, _step_for(step_c, xx), rho),
             x, g, x_s_b, lam_s,
         )
         return (x_new, T.tree_add(xsum, x_new)), None
@@ -102,7 +124,12 @@ def inner_steps_arena(spec, grad_fn, x0, x_s_row, lam, batch, *, K, eta, rho,
          passes.
       3. plain ``grad_fn``: same scan, paying the unpack->vgrad->pack
          round trip through the model's pytree each step.
+
+    ``eta`` may be a scalar, the per-client tuple (auto-eta), or an
+    already-gathered per-cohort row -- array forms ride the kernels as a
+    per-client stepsize operand (``kernels/ops``).
     """
+    eta = _eta_val(eta)
     step_c = 1.0 / (1.0 / eta + rho)
 
     affine = affine_case(grad_fn, spec, per_step=per_step, vr_snapshot=vr_snapshot)
@@ -301,6 +328,9 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
     K = cfg.inner_steps
     f32 = jnp.float32
 
+    eta_v = _eta_val(cfg.eta)
+    per_client = np.ndim(eta_v) > 0
+
     def body(server, staged, idx, round_idx, batch):
         x_s_row = spec.pack(server["x_s"])
         u_hat_c, x0_c = staged["u_hat"], staged["x_c"]
@@ -308,15 +338,21 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
         batch_c = cohort_batch(batch, idx, m, per_step)
 
         def inner(rows, b):
-            x0, lam_t = rows
+            x0, lam_t = rows[0], rows[1]
+            # per-client eta rides the rows tuple so the cohort tiler slices
+            # it alongside the state rows (a closure capture would stay
+            # cohort-sized inside a tile-sized call)
+            eta_t = rows[2] if per_client else eta_v
             snap = (jnp.broadcast_to(x_s_row[None], x0.shape)
                     if cfg.variance_reduction == "svrg" else None)
             return inner_steps_arena(
-                spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta,
+                spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=eta_t,
                 rho=rho, per_step=per_step, vr_snapshot=snap,
             )
 
-        x_K, x_bar = run_cohort_inner(cfg, inner, (x0_c, lam_c), batch_c,
+        rows = (x0_c, lam_c) + (
+            (jnp.asarray(eta_v)[idx],) if per_client else ())
+        x_K, x_bar = run_cohort_inner(cfg, inner, rows, batch_c,
                                       per_step=per_step)
         x_ref = x_bar if cfg.use_avg else x_K
         _, uplink = ops.round_tail(x_ref, lam_c, x_s_row, rho,
@@ -363,17 +399,21 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     lam_c = ops.row_gather(lam, idx)
     x0_c = ops.row_gather(x_c, idx)
     batch_c = cohort_batch(batch, idx, m, per_step_batches)
+    eta_v = _eta_val(cfg.eta)
+    per_client = np.ndim(eta_v) > 0
 
     def inner(rows, b):
-        x0, lam_t = rows
+        x0, lam_t = rows[0], rows[1]
+        eta_t = rows[2] if per_client else eta_v  # tiled with the state rows
         snap = (jnp.broadcast_to(x_s_row[None], x0.shape)
                 if cfg.variance_reduction == "svrg" else None)
         return inner_steps_arena(
-            spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=cfg.eta, rho=rho,
+            spec, grad_fn, x0, x_s_row, lam_t, b, K=K, eta=eta_t, rho=rho,
             per_step=per_step_batches, vr_snapshot=snap,
         )
 
-    x_K, x_bar = run_cohort_inner(cfg, inner, (x0_c, lam_c), batch_c,
+    rows = (x0_c, lam_c) + ((jnp.asarray(eta_v)[idx],) if per_client else ())
+    x_K, x_bar = run_cohort_inner(cfg, inner, rows, batch_c,
                                   per_step=per_step_batches)
     x_ref = x_bar if cfg.use_avg else x_K
 

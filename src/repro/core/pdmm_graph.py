@@ -131,9 +131,12 @@ def inner_steps_graph(spec, grad_fn, x0, s, batch, *, K, eta, c, deg, per_step):
       3. irregular degrees (er): a plain jnp scan with per-node step/degree
          columns (still zero boundary passes with an arena-native oracle).
 
-    deg: STATIC numpy per-node degrees.  Returns (x_K, x_bar).
+    deg: STATIC numpy per-node degrees.  ``eta`` may be a scalar or a
+    STATIC per-node array (the firing subset of the auto-eta tuple, see
+    ``_phase``); either way ``step`` stays a static numpy array, so per-node
+    stepsizes cost nothing at trace time.  Returns (x_K, x_bar).
     """
-    step = 1.0 / (1.0 / eta + c * deg.astype(np.float64))  # static numpy (k,)
+    step = 1.0 / (1.0 / np.asarray(eta, np.float64) + c * deg.astype(np.float64))
 
     affine = affine_case(grad_fn, spec, per_step=per_step)
     if affine is not None:
@@ -150,7 +153,9 @@ def inner_steps_graph(spec, grad_fn, x0, s, batch, *, K, eta, c, deg, per_step):
         return ops.inner_loop_affine(x0, Hs, cs, zero_row, lam, 1.0, 0.0, int(K))
 
     grad_a, _native = arena_grad(grad_fn, spec)
-    const_deg = bool((deg == deg[0]).all())
+    # the scalar-collapse scan needs BOTH a constant effective rho (c d) and
+    # a constant step: per-node eta falls through to the column branch
+    const_deg = bool((deg == deg[0]).all() and (step == step[0]).all())
     if const_deg:
         rho_eff = float(c * deg[0])
         stp = float(step[0])
@@ -241,8 +246,12 @@ def _phase(cfg, topo, spec, x, z, fn, batch, per_step, pmask, fplan, c,
                 x_cand = x_all[dm]
             x_ref = x_cand
         else:
+            # per-node auto-eta: subset the host-resolved tuple by the
+            # phase's STATIC firing members (eta stays trace-constant)
+            eta_dm = (np.asarray(cfg.eta, np.float64)[dm]
+                      if isinstance(cfg.eta, tuple) else cfg.eta)
             x_K, x_bar = inner_steps_graph(
-                spec, fn, x0, s_dm, b_dm, K=cfg.inner_steps, eta=cfg.eta,
+                spec, fn, x0, s_dm, b_dm, K=cfg.inner_steps, eta=eta_dm,
                 c=c, deg=deg_dm, per_step=per_step,
             )
             x_cand = x_K  # the primal carry (GPDMM: x_i^{r,0} = x_i^{r-1,K})

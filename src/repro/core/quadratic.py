@@ -87,7 +87,22 @@ class LeastSquares:
                 c = jnp.pad(c, ((0, 0), (0, w - d)))
             return H, c
 
-        return make_oracle(self.grad, grad_arena=grad_arena, affine_arena=affine_arena)
+        def curvature_arena(spec):
+            # per-client smoothness L_i = lambda_max(AtA_i + reg I) by
+            # batched power iteration on the same H blocks the fused inner
+            # loop consumes (exact here: the gradient is affine, so the
+            # Hessian IS H; validated against eigvalsh in tests)
+            def curv(xa, cb):
+                from repro.core import autotune
+
+                H, _ = affine_arena(spec, cb)
+                return autotune.power_iter_arena(H)
+
+            return curv
+
+        return make_oracle(self.grad, grad_arena=grad_arena,
+                           affine_arena=affine_arena,
+                           curvature_arena=curvature_arena)
 
     def prox_fn(self, i_free=True):
         """Returns prox(v, rho) usable under vmap over the client dim.

@@ -36,6 +36,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FederatedConfig
 from repro.core import arena, faults, staleness
@@ -44,7 +45,7 @@ from repro.core.api import (
     FedOpt, affine_case, arena_grad, cohort_batch, run_cohort_inner,
     use_arena, use_cohort,
 )
-from repro.core.gpdmm import participation_key
+from repro.core.gpdmm import _eta_val, _step_for, participation_key
 from repro.kernels import ops
 
 
@@ -64,7 +65,12 @@ def inner_steps_plain_arena(spec, grad_fn, x0, x_s_row, batch, *, K, eta,
          lam = c - c_i materialised ONCE per round) fused arena updates with
          rho = 0, the gradient via ``arena_grad`` (arena-native oracles pay
          zero boundary passes).
+
+    ``eta`` may be a scalar, the per-client tuple (auto-eta), or an
+    already-gathered per-cohort row -- array forms ride the kernels as a
+    per-client stepsize operand (``kernels/ops``).
     """
+    eta = _eta_val(eta)
     affine = affine_case(grad_fn, spec, per_step=per_step)
     if affine is not None:
         H, c = affine(spec, batch)
@@ -102,7 +108,8 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
     ``_round_arena_cohort`` -- and returns them in ``server_rows``; only the
     ``c_sum_norm`` diagnostic needs the host driver's incremental
     ``sum(c_i)``."""
-    K, eta = cfg.inner_steps, cfg.eta
+    K, eta = cfg.inner_steps, _eta_val(cfg.eta)
+    per_client = np.ndim(eta) > 0
     f32 = jnp.float32
 
     def body(server, staged, idx, round_idx, batch):
@@ -110,22 +117,26 @@ def popstore_body(cfg: FederatedConfig, spec, m: int, grad_fn, per_step):
         c_row = spec.pack(server["c"])
         c_i_c = staged["c_i"]
         batch_c = cohort_batch(batch, idx, m, per_step)
+        eta_c = jnp.asarray(eta)[idx] if per_client else None
 
         def inner(rows, b):
-            (ci_t,) = rows
+            ci_t = rows[0]
+            eta_t = rows[1] if per_client else eta  # tiled with the rows
             x0 = jnp.broadcast_to(x_s_row[None], ci_t.shape)
             return inner_steps_plain_arena(
-                spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+                spec, grad_fn, x0, x_s_row, b, K=K, eta=eta_t,
                 per_step=per_step, c_i=ci_t, c_row=c_row,
             )
 
-        x_K = run_cohort_inner(cfg, inner, (c_i_c,), batch_c,
+        rows = (c_i_c,) + ((eta_c,) if per_client else ())
+        x_K = run_cohort_inner(cfg, inner, rows, batch_c,
                                per_step=per_step)
 
         fplan = faults.plan(cfg, round_idx, m)
         plan_c = faults.take(fplan, idx)
         x_t = faults.inject(cfg.faults, plan_c, x_K)
-        c_i_new_c = ops.scaffold_cv(c_i_c, x_t, c_row, x_s_row, 1.0 / (K * eta))
+        alpha = 1.0 / (K * (eta_c if per_client else eta))
+        c_i_new_c = ops.scaffold_cv(c_i_c, x_t, c_row, x_s_row, alpha)
         keep = None
         if faults.screening_on(cfg):
             keep = faults.screen_keep(cfg, x_t, x_s_row)
@@ -161,7 +172,8 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     same zero-delta contract the masked path realises with selects (equal at
     f32: the masked path subtracts the server row back out of the mean, this
     path never adds it in)."""
-    K, eta = cfg.inner_steps, cfg.eta
+    K, eta = cfg.inner_steps, _eta_val(cfg.eta)
+    per_client = np.ndim(eta) > 0
     spec = arena.ArenaSpec.from_tree(state["x_s"])
     c_i = state["c_i"]
     m = c_i.shape[0]
@@ -172,16 +184,19 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     )
     c_i_c = ops.row_gather(c_i, idx)
     batch_c = cohort_batch(batch, idx, m, per_step_batches)
+    eta_c = jnp.asarray(eta)[idx] if per_client else None
 
     def inner(rows, b):
-        (ci_t,) = rows
+        ci_t = rows[0]
+        eta_t = rows[1] if per_client else eta  # tiled with the state rows
         x0 = jnp.broadcast_to(x_s_row[None], ci_t.shape)
         return inner_steps_plain_arena(
-            spec, grad_fn, x0, x_s_row, b, K=K, eta=eta,
+            spec, grad_fn, x0, x_s_row, b, K=K, eta=eta_t,
             per_step=per_step_batches, c_i=ci_t, c_row=c_row,
         )
 
-    x_K = run_cohort_inner(cfg, inner, (c_i_c,), batch_c,
+    rows = (c_i_c,) + ((eta_c,) if per_client else ())
+    x_K = run_cohort_inner(cfg, inner, rows, batch_c,
                            per_step=per_step_batches)
 
     # the wire corrupts the transmitted packet x_i^{r,K}; both uplinked
@@ -189,8 +204,9 @@ def _round_arena_cohort(cfg: FederatedConfig, state, grad_fn, batch, per_step_ba
     fplan = faults.plan(cfg, state["round"], m)
     plan_c = faults.take(fplan, idx)
     x_t = faults.inject(cfg.faults, plan_c, x_K)
-    # fused per-cohort tail: c_i' = c_i - c + (x_s - x_t)/(K eta)
-    c_i_new_c = ops.scaffold_cv(c_i_c, x_t, c_row, x_s_row, 1.0 / (K * eta))
+    # fused per-cohort tail: c_i' = c_i - c + (x_s - x_t)/(K eta_i)
+    alpha = 1.0 / (K * (eta_c if per_client else eta))
+    c_i_new_c = ops.scaffold_cv(c_i_c, x_t, c_row, x_s_row, alpha)
     keep = None
     if faults.screening_on(cfg):
         keep = faults.screen_keep(cfg, x_t, x_s_row)
@@ -233,7 +249,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     control-variate offset, ONE fused c_i refresh, and the two server
     all-reduces.  ``c_i`` is arena-resident; only the server-sized x_s and c
     rows (1/m of the state) repack per round."""
-    K, eta = cfg.inner_steps, cfg.eta
+    K, eta = cfg.inner_steps, _eta_val(cfg.eta)
     spec = arena.ArenaSpec.from_tree(state["x_s"])
     c_i = state["c_i"]  # arena-resident (m, width)
     m = c_i.shape[0]
@@ -252,7 +268,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
     # variables (dx_i and dc_i) derive from it, so both see the corruption
     fplan = faults.plan(cfg, state["round"], m)
     x_t = faults.inject(cfg.faults, fplan, x_K)
-    # fused per-client tail: c_i' = c_i - c + (x_s - x_t)/(K eta)
+    # fused per-client tail: c_i' = c_i - c + (x_s - x_t)/(K eta_i)
     c_i_new = ops.scaffold_cv(c_i, x_t, c_row, x_s_row, 1.0 / (K * eta))
     x_up = x_t
     pmask = None
@@ -314,7 +330,7 @@ def _round_arena(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches):
 def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     if use_arena(cfg, state["x_s"]):
         return _round_arena(cfg, state, grad_fn, batch, per_step_batches)
-    K, eta = cfg.inner_steps, cfg.eta
+    K, eta = cfg.inner_steps, _eta_val(cfg.eta)
     x_s, c, c_i = state["x_s"], state["c"], state["c_i"]
     m = jax.tree.leaves(c_i)[0].shape[0]
     x_s_b = T.tree_broadcast(x_s, m)
@@ -326,7 +342,8 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     def one_step(x, xs_k):
         b = xs_k if per_step_batches else batch
         g = vgrad(x, b)
-        x_new = T.tmap(lambda xx, gg, ll: ops.fused_update(xx, gg, xx, ll, eta, 0.0), x, g, lam)
+        x_new = T.tmap(lambda xx, gg, ll: ops.fused_update(
+            xx, gg, xx, ll, _step_for(eta, xx), 0.0), x, g, lam)
         return x_new, None
 
     if per_step_batches:
@@ -340,7 +357,9 @@ def _round(cfg: FederatedConfig, state, grad_fn, batch, per_step_batches=False):
     alpha = 1.0 / (K * eta)
     fplan = faults.plan(cfg, state["round"], m)
     x_t = faults.inject_tree(cfg.faults, fplan, x_K)
-    c_i_new = T.tmap(lambda ci, cc, s, xk: ci - cc + (s - xk) * alpha, c_i, c_b, x_s_b, x_t)
+    c_i_new = T.tmap(
+        lambda ci, cc, s, xk: ci - cc + (s - xk) * _step_for(alpha, xk),
+        c_i, c_b, x_s_b, x_t)
     x_up = x_t
     pmask = None
     if cfg.participation < 1.0:

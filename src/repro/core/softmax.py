@@ -97,4 +97,26 @@ class SoftmaxRegression:
 
             return ga
 
-        return make_oracle(self.grad, grad_arena=grad_arena)
+        def curvature_arena(spec):
+            # Softmax cross-entropy Hessian: (1/B) sum_b G_b kron (diag(p_b)
+            # - p_b p_b^T) over augmented features [x_b | 1] (the bias rides
+            # as a constant feature).  lambda_max(diag(p) - p p^T) <= 1/2,
+            # so L_i <= lambda_max(Xa_i^T Xa_i) / (2B) -- a point-free upper
+            # bound (the logistic-regression bound generalised), estimated
+            # by batched power iteration on the per-client augmented Gram
+            # blocks.  An upper bound is the safe direction for stepsizes:
+            # eta_i = safety / L_i only shrinks.
+            def curv(xa, batch):
+                from repro.core import autotune
+
+                x = batch["x"]  # (m, B, F)
+                B = x.shape[1]
+                ones = jnp.ones(x.shape[:2] + (1,), x.dtype)
+                xaug = jnp.concatenate([x, ones], axis=-1)
+                G = jnp.einsum("mbf,mbg->mfg", xaug, xaug) / (2.0 * B)
+                return autotune.power_iter_arena(G)
+
+            return curv
+
+        return make_oracle(self.grad, grad_arena=grad_arena,
+                           curvature_arena=curvature_arena)

@@ -62,11 +62,13 @@ def fits_vmem(width: int) -> bool:
     return width % LANES == 0 and vmem_bytes(width) <= VMEM_CAP_BYTES
 
 
-def _kernel(*refs, K: int, step: float, rho: float, has_lam: bool, has_off: bool):
+def _kernel(*refs, K: int, step, rho: float, has_lam: bool, has_off: bool,
+            has_step: bool = False):
     it = iter(refs)
     x_ref, h_ref, c_ref, xs_ref = next(it), next(it), next(it), next(it)
     lam_ref = next(it) if has_lam else None
     off_ref = next(it) if has_off else None
+    step_ref = next(it) if has_step else None
     xk_ref, xb_ref = next(it), next(it)
 
     f32 = jnp.float32
@@ -77,6 +79,8 @@ def _kernel(*refs, K: int, step: float, rho: float, has_lam: bool, has_off: bool
     xs = xs_ref[...].astype(f32)
     lam = lam_ref[...].astype(f32) if lam_ref is not None else None
     x0 = x_ref[...].astype(f32)
+    if step_ref is not None:  # per-client stepsize operand (core.autotune)
+        step = step_ref[0, 0]
 
     def body(_, carry):
         x, xsum = carry
@@ -97,8 +101,10 @@ def inner_loop_affine_pallas(x0, H, c, x_s, lam, step, rho, K: int, *,
                              off=None, interpret: bool = False):
     """x0, c: (m, W); H: (m, W, W); x_s: (W,) server row (broadcast
     in-kernel); lam: (m, W) or None (dual term dropped); off: (m, W) or None
-    (per-client affine offset, g = H x - (c + off)).  Returns (x_K, x_bar),
-    both (m, W)."""
+    (per-client affine offset, g = H x - (c + off)); step: scalar (baked as
+    a compile-time constant -- the pre-auto-eta path, bitwise unchanged) or
+    (m,) per-client stepsizes loaded as a (1, LANES) row operand per grid
+    step (core.autotune).  Returns (x_K, x_bar), both (m, W)."""
     m, w = x0.shape
     assert w % LANES == 0, f"arena width {w} not a multiple of {LANES}"
     assert H.shape == (m, w, w) and c.shape == (m, w), (H.shape, c.shape)
@@ -122,9 +128,18 @@ def inner_loop_affine_pallas(x0, H, c, x_s, lam, step, rho, K: int, *,
     if off is not None:
         args.append(off)
         in_specs.append(row_bs)
+    has_step = jnp.ndim(step) > 0
+    if has_step:
+        assert step.shape == (m,), step.shape
+        args.append(jnp.broadcast_to(
+            step.astype(jnp.float32)[:, None], (m, LANES)))
+        in_specs.append(pl.BlockSpec((1, LANES), lambda i: (i, 0)))
     x_K, x_bar = pl.pallas_call(
-        functools.partial(_kernel, K=int(K), step=float(step), rho=float(rho),
-                          has_lam=lam is not None, has_off=off is not None),
+        functools.partial(_kernel, K=int(K),
+                          step=None if has_step else float(step),
+                          rho=float(rho),
+                          has_lam=lam is not None, has_off=off is not None,
+                          has_step=has_step),
         grid=(m,),
         in_specs=in_specs,
         out_specs=(row_bs, row_bs),

@@ -18,8 +18,19 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref as _ref
+
+
+def _step_arr(step):
+    """None for a host scalar step (the baked-constant kernel path, bitwise
+    unchanged from before per-client stepsizes existed); a (m,) f32 array for
+    the per-client auto-eta path (``core.autotune``), fed to the kernels as a
+    per-client stepsize OPERAND instead of a baked constant."""
+    if np.ndim(step) == 0:
+        return None
+    return jnp.asarray(step, jnp.float32)
 
 _DEFAULT_IMPL = "xla"
 
@@ -255,9 +266,14 @@ def fused_update(x, g, xs, lam, step, rho, *, impl: Optional[str] = None,
     inner loop is memory-bound, so unfused XLA would read/write 6 arrays.
     ``block=None`` resolves to the single module-wide default
     (``fused_update.BLOCK_ROWS``), checked against the VMEM budget.
+
+    ``step`` is a scalar or a per-client array already broadcastable against
+    ``x`` (the pytree tmap path reshapes a (m,) stepsize to (m, 1, ..) per
+    leaf); the array form rides the pure-jnp reference -- the per-leaf pytree
+    layout is not the per-client-eta deployment path, the arena is.
     """
     impl = _resolve(impl)
-    if impl == "xla":
+    if impl == "xla" or _step_arr(step) is not None:
         return _ref.fused_update_ref(x, g, xs, lam, step, rho)
     from repro.kernels import fused_update as fu
 
@@ -278,14 +294,22 @@ def fused_update_arena(x, g, x_s, lam, step, rho, *, impl: Optional[str] = None,
     lam (m, width) or None (dual term dropped -- SCAFFOLD/FedAvg's rho = 0
     plain steps); x_s (width,) server row broadcast in-kernel (never
     materialised in HBM).  ONE kernel launch per inner step instead of one
-    per pytree leaf."""
+    per pytree leaf.
+
+    ``step``: scalar (baked into the kernel -- bitwise the pre-auto-eta
+    graph) or (m,) per-client stepsizes (``core.autotune``), fed to the
+    kernel as a broadcast row operand."""
     impl = _resolve(impl)
+    step_a = _step_arr(step)
     if impl == "xla":
-        return _ref.fused_update_ref(x, g, x_s[None] if x_s.ndim == 1 else x_s, lam, step, rho)
+        step_b = step if step_a is None else step_a[:, None]
+        return _ref.fused_update_ref(
+            x, g, x_s[None] if x_s.ndim == 1 else x_s, lam, step_b, rho)
     from repro.kernels import round_tail as rt
 
     return rt.fused_update_arena_pallas(
-        x, g, x_s, lam, step, rho, block=block, interpret=(impl == "pallas_interpret")
+        x, g, x_s, lam, step if step_a is None else step_a, rho,
+        block=block, interpret=(impl == "pallas_interpret")
     )
 
 
@@ -303,10 +327,15 @@ def inner_loop_affine(x0, H, c, x_s, lam, step, rho, K: int, *,
     SCAFFOLD control-variate buffer rides here with zero extra HBM
     materialisation.  Returns (x_K, x_bar).  Callers must gate on
     ``affine_inner_fits(W)`` (the VMEM budget).
+
+    ``step``: scalar (baked -- bitwise the pre-auto-eta kernel) or (m,)
+    per-client stepsizes fed as a row operand (``core.autotune``).
     """
     impl = _resolve(impl)
+    step_a = _step_arr(step)
     if impl == "xla":
         f32 = jnp.float32
+        step_b = step if step_a is None else step_a[:, None]
         x_s_b = x_s.astype(f32)[None]
         lam_f = lam.astype(f32) if lam is not None else None
         Hf, cf = H.astype(f32), c.astype(f32)
@@ -319,7 +348,7 @@ def inner_loop_affine(x0, H, c, x_s, lam, step, rho, K: int, *,
             acc = g + rho * (x - x_s_b)
             if lam_f is not None:
                 acc = acc + lam_f
-            x = x - step * acc
+            x = x - step_b * acc
             return (x, xsum + x), None
 
         init = (x0.astype(f32), jnp.zeros_like(x0, f32))
@@ -328,8 +357,8 @@ def inner_loop_affine(x0, H, c, x_s, lam, step, rho, K: int, *,
     from repro.kernels import inner_loop as il
 
     return il.inner_loop_affine_pallas(
-        x0, H, c, x_s, lam, step, rho, K, off=off,
-        interpret=(impl == "pallas_interpret")
+        x0, H, c, x_s, lam, step if step_a is None else step_a, rho, K,
+        off=off, interpret=(impl == "pallas_interpret")
     )
 
 
@@ -342,17 +371,23 @@ def scaffold_cv(c_i, x_K, c_s, x_s, alpha, *, impl: Optional[str] = None,
     c_i, x_K: (m, width) client buffers; c_s, x_s: (width,) server rows
     broadcast in-kernel.  2 client reads + 1 write instead of the ~5-pass
     per-leaf tmap chain (which additionally materialises both server
-    broadcasts at (m, width))."""
+    broadcasts at (m, width)).
+
+    ``alpha``: scalar (baked) or (m,) per-client 1/(K eta_i) under auto-eta
+    (``core.autotune``), fed as a row operand."""
     impl = _resolve(impl)
+    alpha_a = _step_arr(alpha)
     if impl == "xla":
         f32 = jnp.float32
+        alpha_b = alpha if alpha_a is None else alpha_a[:, None]
         out = (c_i.astype(f32) - c_s.astype(f32)[None]
-               + alpha * (x_s.astype(f32)[None] - x_K.astype(f32)))
+               + alpha_b * (x_s.astype(f32)[None] - x_K.astype(f32)))
         return out.astype(c_i.dtype)
     from repro.kernels import round_tail as rt
 
     return rt.scaffold_cv_pallas(
-        c_i, x_K, c_s, x_s, alpha, block=block, interpret=(impl == "pallas_interpret")
+        c_i, x_K, c_s, x_s, alpha if alpha_a is None else alpha_a,
+        block=block, interpret=(impl == "pallas_interpret")
     )
 
 
@@ -432,6 +467,30 @@ def screen_uplink(u, ref, *, impl: Optional[str] = None,
 
     return sk.screen_uplink_pallas(
         u, ref, block=block, interpret=(impl == "pallas_interpret"))
+
+
+def residual_norm(x, x_prev, *, impl: Optional[str] = None,
+                  block: Optional[int] = None):
+    """Fused fixed-point residual norms (the early-termination criterion,
+    ``core.autotune``): ONE pass over the (m, width) client-state arena and
+    its previous-round snapshot emitting, per client row,
+
+        dx2_i = ||x_i - x_prev_i||^2        (fixed-point residual)
+        x2_i  = ||x_i||^2                   (normaliser)
+
+    so the driver can evaluate pfb-clean's relative stopping rule
+    ``||x - x_prev|| / ||x|| < tol`` without a second read of either buffer.
+    Returns ``(dx2 (m,) f32, x2 (m,) f32)``; all math in f32.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        xf = x.astype(jnp.float32)
+        d = xf - x_prev.astype(jnp.float32)
+        return jnp.sum(d * d, axis=1), jnp.sum(xf * xf, axis=1)
+    from repro.kernels import residual as rs
+
+    return rs.residual_norm_pallas(
+        x, x_prev, block=block, interpret=(impl == "pallas_interpret"))
 
 
 def stale_mix(uplink, cache, buf, fresh, store, w, *, impl: Optional[str] = None,

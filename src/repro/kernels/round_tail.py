@@ -138,14 +138,27 @@ def _scaffold_cv_kernel(ci_ref, xk_ref, c_ref, xs_ref, o_ref, *, alpha: float):
     o_ref[0] = (ci - c + alpha * (xs - xk)).astype(o_ref.dtype)
 
 
+def _scaffold_cv_kernel_valpha(ci_ref, xk_ref, c_ref, xs_ref, a_ref, o_ref):
+    # per-client alpha = 1/(K eta_i) loaded as a (1, LANES) row operand
+    # (core.autotune's per-client stepsizes)
+    f32 = jnp.float32
+    ci = ci_ref[0].astype(f32)
+    xk = xk_ref[0].astype(f32)
+    c = c_ref[...].astype(f32)
+    xs = xs_ref[...].astype(f32)
+    o_ref[0] = (ci - c + a_ref[0, 0] * (xs - xk)).astype(o_ref.dtype)
+
+
 def scaffold_cv_pallas(c_i, x_K, c_s, x_s, alpha, *, block=None, interpret: bool = False):
     """SCAFFOLD eq. (30) control-variate update in ONE pass:
 
         c_i' = c_i - c + (x_s - x_K) * alpha        (alpha = 1/(K eta))
 
     c_i, x_K: (m, width) client buffers; c_s, x_s: (width,) server rows
-    (broadcast in-kernel, never materialised at (m, width)).  2 client reads
-    + 1 write instead of the ~5-pass per-leaf tmap chain."""
+    (broadcast in-kernel, never materialised at (m, width)).  ``alpha``:
+    scalar (baked constant) or (m,) per-client values (auto-eta) riding a
+    broadcast row operand.  2 client reads + 1 write instead of the ~5-pass
+    per-leaf tmap chain."""
     m, w = c_i.shape
     br = _resolve_block(block, w // LANES)
     assert_vmem_budget(5, br)
@@ -155,14 +168,24 @@ def scaffold_cv_pallas(c_i, x_K, c_s, x_s, alpha, *, block=None, interpret: bool
     st, _, _ = _tile(x_s, br)
     client_bs = pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0))
     server_bs = pl.BlockSpec((br, LANES), lambda i, j: (j, 0))
+    args = [ct, xt, cst, st]
+    in_specs = [client_bs, client_bs, server_bs, server_bs]
+    if jnp.ndim(alpha) > 0:
+        assert alpha.shape == (m,), alpha.shape
+        args.append(jnp.broadcast_to(
+            alpha.astype(jnp.float32)[:, None], (m, LANES)))
+        in_specs.append(pl.BlockSpec((1, LANES), lambda i, j: (i, 0)))
+        kernel = _scaffold_cv_kernel_valpha
+    else:
+        kernel = functools.partial(_scaffold_cv_kernel, alpha=float(alpha))
     out = pl.pallas_call(
-        functools.partial(_scaffold_cv_kernel, alpha=float(alpha)),
+        kernel,
         grid=(m, rows_p // br),
-        in_specs=[client_bs, client_bs, server_bs, server_bs],
+        in_specs=in_specs,
         out_specs=client_bs,
         out_shape=jax.ShapeDtypeStruct((m, rows_p, LANES), c_i.dtype),
         interpret=interpret,
-    )(ct, xt, cst, st)
+    )(*args)
     return _untile(out, w, (m,))
 
 
@@ -286,10 +309,28 @@ def _update_kernel_nolam(x_ref, g_ref, xs_ref, o_ref, *, step: float, rho: float
     o_ref[0] = out.astype(o_ref.dtype)
 
 
+def _update_kernel_vstep(x_ref, g_ref, xs_ref, lam_ref, step_ref, o_ref, *, rho: float):
+    # per-client stepsize loaded as a (1, LANES) row operand (core.autotune)
+    f32 = jnp.float32
+    out = eq20(x_ref[0].astype(f32), g_ref[0].astype(f32),
+               xs_ref[...].astype(f32), lam_ref[0].astype(f32),
+               step_ref[0, 0], rho)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _update_kernel_nolam_vstep(x_ref, g_ref, xs_ref, step_ref, o_ref, *, rho: float):
+    f32 = jnp.float32
+    out = eq20(x_ref[0].astype(f32), g_ref[0].astype(f32),
+               xs_ref[...].astype(f32), None, step_ref[0, 0], rho)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
 def fused_update_arena_pallas(x, g, x_s, lam, step, rho, *, block=None, interpret: bool = False):
     """x, g: (m, width); x_s: (width,) server row (broadcast in-kernel);
-    lam: (m, width) or None (dual term dropped).  One pallas_call over the
-    whole packed buffer."""
+    lam: (m, width) or None (dual term dropped).  ``step``: scalar (baked as
+    a compile-time constant -- the pre-auto-eta path, bitwise unchanged) or
+    (m,) per-client stepsizes riding a broadcast row operand
+    (core.autotune).  One pallas_call over the whole packed buffer."""
     m, w = x.shape
     br = _resolve_block(block, w // LANES)
     assert_vmem_budget(4 if lam is None else 5, br)
@@ -303,9 +344,20 @@ def fused_update_arena_pallas(x, g, x_s, lam, step, rho, *, block=None, interpre
         lt, _, _ = _tile(lam, br)
         args.append(lt)
         in_specs.append(client_bs)
-    kernel = _update_kernel_nolam if lam is None else _update_kernel
+    if jnp.ndim(step) > 0:
+        assert step.shape == (m,), step.shape
+        args.append(jnp.broadcast_to(
+            step.astype(jnp.float32)[:, None], (m, LANES)))
+        in_specs.append(pl.BlockSpec((1, LANES), lambda i, j: (i, 0)))
+        kernel = functools.partial(
+            _update_kernel_nolam_vstep if lam is None else _update_kernel_vstep,
+            rho=float(rho))
+    else:
+        kernel = functools.partial(
+            _update_kernel_nolam if lam is None else _update_kernel,
+            step=float(step), rho=float(rho))
     out = pl.pallas_call(
-        functools.partial(kernel, step=float(step), rho=float(rho)),
+        kernel,
         grid=(m, rows_p // br),
         in_specs=in_specs,
         out_specs=client_bs,

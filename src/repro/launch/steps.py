@@ -121,11 +121,17 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh) -> StepBundle:
         # round-batched driver: R full rounds inside ONE jitted lax.scan
         # with the (donated) state carried in place -- one dispatch instead
         # of R, amortising per-round launch overhead.  Batch leaves carry a
-        # leading R dim; metrics come back stacked (R, ...).
-        train_step = make_fed_scan(fed, client_grad)
+        # leading R dim; metrics come back stacked (R, ...).  tol > 0 adds
+        # the per-round fixed-point residual metrics the early-exit host
+        # loop reads (tol == 0 compiles the identical fixed-budget graph).
+        train_step = make_fed_scan(fed, client_grad, tol=cfg.fed.tol)
     else:
         def train_step(fed_state, batch):
             new_state, metrics = fed.round(fed_state, client_grad, batch)
+            if cfg.fed.tol > 0.0:  # static gate, same contract as the scan
+                from repro.core import autotune
+                metrics = {**metrics,
+                           **autotune.state_residual(fed_state, new_state)}
             return new_state, metrics
 
     # shapes + shardings

@@ -74,7 +74,9 @@ def run(
     steps: int = 20,
     algorithm: str = "gpdmm",
     k: int = 2,
-    eta: float = 0.3,
+    eta: float | str = 0.3,
+    tol: float = 0.0,
+    patience: int = 1,
     m: int = 4,
     per_client_batch: int = 4,
     seq_len: int = 128,
@@ -131,24 +133,52 @@ def run(
         profile_dir or (str(pathlib.Path(trace_out).parent / "jaxprof")
                         if trace_out else "telemetry/jaxprof"))
 
+    model = build_model(cfg)  # the model ignores cfg.fed (checked)
+
+    key = jax.random.key(seed)
+    params = model.init(key)
+
+    _eta_cache: list = []
+
+    def resolved_eta():
+        """The CLI eta, with ``"auto"`` resolved ONCE host-side into the
+        per-client tuple (power-iteration L_i estimates at the init params
+        over a fixed probe batch, ``core.autotune``).  Cached: every rebuild
+        -- including each watchdog backoff -- reuses the same derived
+        values, and the checkpoint fingerprint records the CLI value, so a
+        ``--resume`` re-derives the identical tuple deterministically."""
+        if not isinstance(eta, str):
+            return eta
+        if not _eta_cache:
+            from repro.core import autotune
+            probe = next(lm_batches(jax.random.key(seed + 3), 1, m,
+                                    per_client_batch, seq_len, cfg.vocab_size))
+            gf = lambda p, b: jax.grad(lambda q: model.loss(q, b)[0])(p)
+            L = autotune.estimate_L(gf, params, m, probe)
+            etas = autotune.derive_eta(L)
+            print(f"[train] auto-eta: per-client L in [{L.min():.4g}, "
+                  f"{L.max():.4g}], eta in [{etas.min():.4g}, "
+                  f"{etas.max():.4g}]", flush=True)
+            _eta_cache.append(tuple(float(e) for e in etas))
+        return _eta_cache[0]
+
     def fed_cfg(scale: float) -> FederatedConfig:
         # eta backoff after a rollback re-derives rho = 1/(K eta') too: the
-        # watchdog shrinks the stepsize of the whole primal-dual pair
-        return dataclasses.replace(
-            cfg.fed, algorithm=algorithm, inner_steps=k, eta=eta * scale,
+        # watchdog shrinks the stepsize of the whole primal-dual pair (under
+        # auto-eta the backoff rescales every per-client entry uniformly)
+        from repro.core import autotune
+        fc = dataclasses.replace(
+            cfg.fed, algorithm=algorithm, inner_steps=k, eta=resolved_eta(),
             num_clients=m, layout="client_axis", uplink_bits=uplink_bits,
             participation=participation, popstore=popstore_mode,
             rounds_per_call=rounds_per_call,
             faults=fault_cfg, screen=screen, async_rounds=async_rounds,
             deadline=deadline, max_staleness=max_staleness,
-            stale_gamma=stale_gamma,
+            stale_gamma=stale_gamma, tol=tol, patience=patience,
         )
+        return autotune.scale_eta(fc, scale)
 
     cfg = dataclasses.replace(cfg, fed=fed_cfg(1.0))
-    model = build_model(cfg)
-
-    key = jax.random.key(seed)
-    params = model.init(key)
 
     # fingerprint saved with every checkpoint and checked on --resume: a
     # restored state only continues the SAME trajectory if the run that
@@ -299,10 +329,17 @@ def run(
             rf = _instrument(runner.round)
             return fed, rf, rf
         fed = make_fed(fed_cfg(scale))
-        round_fn = jax.jit(lambda s, b: fed.round(s, client_grad, b),
-                           donate_argnums=(0,))
+
+        def one_round(s, b):
+            s2, mets = fed.round(s, client_grad, b)
+            if tol > 0.0:  # static gate: tol=0 compiles the pre-PR graph
+                from repro.core import autotune
+                mets = {**mets, **autotune.state_residual(s, s2)}
+            return s2, mets
+
+        round_fn = jax.jit(one_round, donate_argnums=(0,))
         if R > 1:
-            scan_rounds = make_scan_rounds(fed, client_grad)
+            scan_rounds = make_scan_rounds(fed, client_grad, tol=tol)
             step_fn = jax.jit(lambda s, b: scan_rounds(s, b),
                               donate_argnums=(0,))
         else:
@@ -437,6 +474,23 @@ def run(
         nonlocal last_saved
         data = traced_batches(make_data(from_round))
 
+        ee = None
+        if tol > 0.0:
+            from repro.core import autotune
+            ee = autotune.EarlyExit(tol, patience)
+
+        def note_exit(i):
+            saved = steps - i
+            tracer.instant("autotune/early_exit",
+                           {"round": i, "rounds_saved": saved,
+                            "rel_residual": ee.last_rel})
+            if registry is not None:
+                registry.counter("rounds_saved").inc(saved)
+            print(f"[train] early exit at round {i}: relative residual "
+                  f"{ee.last_rel:.3g} < tol {tol:g} for {patience} "
+                  f"consecutive round(s); {saved} budgeted round(s) saved",
+                  flush=True)
+
         def log_round(i, state, metrics, eb):
             nonlocal last_saved
             with tracer.span("round/eval_log", {"round": i}):
@@ -491,6 +545,16 @@ def run(
                 if prof is not None:
                     jax.block_until_ready(state)
                     prof.after_round(i)
+                if ee is not None and "res_dx2" in metrics:
+                    # the scan chunk is all-or-nothing: the criterion may
+                    # have fired mid-chunk, but the state already carries the
+                    # whole chunk -- only the UNDISPATCHED rounds are saved
+                    if ee.update(metrics["res_dx2"], metrics["res_x2"]) is not None:
+                        note_exit(i)
+                        eb = eval_batch if eval_batch is not None else last
+                        if not history or history[-1]["round"] != i:
+                            log_round(i, state, metrics, eb)
+                        return state, "done"
                 if (i - R) // max(1, log_every) != i // max(1, log_every):
                     eb = eval_batch if eval_batch is not None else last
                     if log_round(i, state, metrics, eb):
@@ -521,6 +585,13 @@ def run(
                 jax.block_until_ready(state)
                 prof.after_round(i)
             note_faults(metrics)
+            if ee is not None and metrics and "res_dx2" in metrics:
+                if ee.update(metrics["res_dx2"], metrics["res_x2"]) is not None:
+                    note_exit(i)
+                    eb = eval_batch if eval_batch is not None else batch
+                    if not history or history[-1]["round"] != i:
+                        log_round(i, state, metrics, eb)
+                    return state, "done"
             if (i - 1) // max(1, log_every) != i // max(1, log_every) or i == steps:
                 eb = eval_batch if eval_batch is not None else batch
                 if log_round(i, state, metrics, eb):
@@ -611,6 +682,11 @@ def run(
     return history
 
 
+def _eta_arg(s: str):
+    """``--eta`` accepts a float or the literal ``auto``."""
+    return "auto" if s == "auto" else float(s)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -620,7 +696,17 @@ def main():
     ap.add_argument("--algorithm", default="gpdmm",
                     choices=["gpdmm", "agpdmm", "scaffold", "fedavg", "fedsplit"])
     ap.add_argument("--k", type=int, default=2)
-    ap.add_argument("--eta", type=float, default=0.3)
+    ap.add_argument("--eta", type=_eta_arg, default=0.3,
+                    help="client stepsize, or 'auto' to derive per-client "
+                         "eta_i = safety / L_i from a power-iteration "
+                         "curvature probe (see docs/autotune.md)")
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="relative fixed-point residual tolerance: terminate "
+                         "once ||x - x_prev|| / ||x|| < tol for --patience "
+                         "consecutive rounds (0 = fixed round budget)")
+    ap.add_argument("--patience", type=int, default=1,
+                    help="consecutive sub-tol rounds required before the "
+                         "early exit fires")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
@@ -699,7 +785,8 @@ def main():
     args = ap.parse_args()
     run(
         args.arch, reduced=args.reduced, steps=args.steps, algorithm=args.algorithm,
-        k=args.k, eta=args.eta, m=args.clients, per_client_batch=args.batch,
+        k=args.k, eta=args.eta, tol=args.tol, patience=args.patience,
+        m=args.clients, per_client_batch=args.batch,
         seq_len=args.seq, seed=args.seed, ckpt_dir=args.ckpt_dir, resume=args.resume,
         uplink_bits=args.uplink_bits, participation=args.participation,
         popstore_mode={"auto": "auto", "on": True, "off": False}[args.popstore],
